@@ -1,0 +1,77 @@
+"""Paper figure analogue (claim C3): staleness (max/mean AoU) and
+participation fairness (Jain index) per policy over a long horizon —
+wireless layer only (no training) so the horizon can be long."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.configs import FLConfig, NOMAConfig
+from repro.core import (
+    RoundEnv,
+    aoi,
+    noma,
+    schedule_age_noma,
+    schedule_channel_greedy,
+    schedule_random,
+    schedule_round_robin,
+)
+
+
+def jain(x):
+    x = np.asarray(x, dtype=float)
+    return float(x.sum() ** 2 / (len(x) * (x ** 2).sum() + 1e-12))
+
+
+def run(out_dir="experiments/bench", rounds=200, n_clients=30, seed=0):
+    ncfg, fl = NOMAConfig(), FLConfig()
+    rng_master = np.random.default_rng(seed)
+    d = noma.sample_distances(rng_master, n_clients, ncfg)
+    n_samples = rng_master.integers(100, 1000, n_clients).astype(float)
+    cpu = rng_master.uniform(0.5e9, 2e9, n_clients)
+
+    rows = []
+    for policy in ("age_noma", "random", "channel", "round_robin"):
+        rng = np.random.default_rng(seed + 1)
+        ages = aoi.init_ages(n_clients)
+        part = np.zeros(n_clients)
+        max_ages, times = [], []
+        for t in range(rounds):
+            env = RoundEnv(noma.sample_gains(rng, d, ncfg), n_samples, cpu,
+                           ages, 4e6)
+            if policy == "age_noma":
+                s = schedule_age_noma(env, ncfg, fl)
+            elif policy == "random":
+                s = schedule_random(rng, env, ncfg, fl)
+            elif policy == "channel":
+                s = schedule_channel_greedy(env, ncfg, fl)
+            else:
+                s = schedule_round_robin(t, env, ncfg, fl)
+            ages = aoi.update_ages(ages, s.selected)
+            part += s.selected
+            max_ages.append(aoi.max_age(ages))
+            times.append(s.t_round)
+        rows.append({
+            "policy": policy,
+            "max_age_p99": float(np.percentile(max_ages, 99)),
+            "max_age_mean": float(np.mean(max_ages)),
+            "jain_participation": jain(part),
+            "clients_never_selected": int(np.sum(part == 0)),
+            "mean_round_s": float(np.mean(times)),
+        })
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fairness_age.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("name,policy,max_age_p99,jain,never_selected,mean_round_s")
+    for r in rows:
+        print(f"fairness_age,{r['policy']},{r['max_age_p99']:.1f},"
+              f"{r['jain_participation']:.3f},{r['clients_never_selected']},"
+              f"{r['mean_round_s']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks: XLA twin vs Pallas-interpret oracle timing on
+CPU (correctness-weighted; real perf numbers require TPU — documented in
+EXPERIMENTS.md) plus derived arithmetic-intensity metadata for the roofline
+narrative."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(out_dir="experiments/bench"):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # fedagg: 10 clients x 1M-param update
+    c, n = 10, 1 << 20
+    u = jax.random.normal(key, (c, n), jnp.float32)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (c,))
+    us_xla = _time(lambda: ops.weighted_sum(u, w, impl="xla"))
+    flops = c * n * 2
+    bytes_ = (c * n + n) * 4
+    rows.append({"kernel": "fedagg", "shape": f"{c}x{n}",
+                 "us_xla_cpu": us_xla, "flops": flops, "bytes": bytes_,
+                 "arith_intensity": flops / bytes_})
+
+    # wkv6 chunked vs naive recurrence
+    b, h, t, cd = 1, 8, 1024, 64
+    ks = jax.random.split(key, 5)
+    r, k2, v = (jax.random.normal(ks[i], (b, h, t, cd)) * 0.5
+                for i in range(3))
+    wl = -jnp.exp(jax.random.normal(ks[3], (b, h, t, cd)))
+    uu = jax.random.normal(ks[4], (h, cd)) * 0.5
+    from repro.models.rwkv import wkv6_chunked
+    from repro.kernels.ref import wkv6_ref
+    s0 = jnp.zeros((b, h, cd, cd))
+    us_chunk = _time(jax.jit(lambda *a: wkv6_chunked(*a, chunk=64)),
+                     r, k2, v, wl, uu, s0)
+    us_naive = _time(jax.jit(wkv6_ref), r, k2, v, wl, uu, s0)
+    rows.append({"kernel": "wkv6", "shape": f"{b}x{h}x{t}x{cd}",
+                 "us_chunked_cpu": us_chunk, "us_naive_cpu": us_naive,
+                 "chunked_speedup_cpu": us_naive / us_chunk})
+
+    # swa window vs full attention compute ratio
+    from repro.kernels.ref import swa_ref
+    b, s, hh, kh, hd, win = 1, 2048, 4, 2, 64, 256
+    q = jax.random.normal(ks[0], (b, s, hh, hd))
+    kk = jax.random.normal(ks[1], (b, s, kh, hd))
+    vv = jax.random.normal(ks[2], (b, s, kh, hd))
+    us_swa = _time(jax.jit(lambda *a: swa_ref(*a, win)), q, kk, vv)
+    rows.append({"kernel": "swa", "shape": f"s{s}w{win}",
+                 "us_ref_cpu": us_swa,
+                 "flops_vs_full": win / s})
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "kernels.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    for r_ in rows:
+        us = r_.get("us_xla_cpu") or r_.get("us_chunked_cpu") \
+            or r_.get("us_ref_cpu")
+        print(f"kernel_{r_['kernel']},{r_['shape']},{us:.1f}us")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

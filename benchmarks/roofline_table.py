@@ -1,0 +1,56 @@
+"""Assemble the EXPERIMENTS.md roofline table from the dry-run JSON records
+(benchmarks never re-compile; they read experiments/dryrun/)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(dryrun_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs, mesh_filter="pod_16x16"):
+    lines = ["| arch | shape | t_comp(ms) | t_mem(ms) | t_coll(ms) | "
+             "bottleneck | useful | mem/chip(GiB) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if not r.get("ok") or r.get("mesh") != mesh_filter:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['memory_per_chip']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def run(out_dir="experiments/bench", dryrun_dir="experiments/dryrun"):
+    recs = load_records(dryrun_dir)
+    ok = [r for r in recs if r.get("ok")]
+    fail = [r for r in recs if not r.get("ok")]
+    print(f"roofline_table,records,{len(recs)},ok,{len(ok)},fail,{len(fail)}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "roofline_table.md"), "w") as f:
+        f.write("## Single-pod (16x16 = 256 chips)\n\n")
+        f.write(fmt_table(recs, "pod_16x16"))
+        f.write("\n\n## Multi-pod (2x16x16 = 512 chips)\n\n")
+        f.write(fmt_table(recs, "multipod_2x16x16"))
+        f.write("\n")
+    for r in sorted(ok, key=lambda x: -max(x["t_compute"], x["t_memory"],
+                                           x["t_collective"])):
+        if r["mesh"] != "pod_16x16":
+            continue
+        print(f"roofline,{r['arch']},{r['shape']},{r['bottleneck']},"
+              f"tc={r['t_compute']*1e3:.2f}ms,tm={r['t_memory']*1e3:.2f}ms,"
+              f"tl={r['t_collective']*1e3:.2f}ms")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,...`` CSV rows; writes JSON artifacts to experiments/bench/.
+Claim mapping (DESIGN.md section 1):
+    C1 fl_convergence      accuracy vs rounds/time per policy
+    C2 noma_vs_oma         round-time NOMA vs OMA
+    C3 fairness_age        staleness + participation fairness
+    C4 pairing_optimality  heuristic vs exhaustive pairing
+       kernels             Pallas-kernel micro-benches
+       roofline            dry-run derived roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fairness_age,
+    fl_convergence,
+    kernels_bench,
+    noma_vs_oma,
+    pairing_optimality,
+    roofline_table,
+)
+
+BENCHES = {
+    "noma_vs_oma": lambda quick: noma_vs_oma.run(
+        trials=50 if quick else 300),
+    "fairness_age": lambda quick: fairness_age.run(
+        rounds=50 if quick else 200),
+    "pairing_optimality": lambda quick: pairing_optimality.run(
+        trials=30 if quick else 200),
+    "kernels": lambda quick: kernels_bench.run(),
+    "fl_convergence": lambda quick: fl_convergence.run(
+        rounds=10 if quick else 40, quick=quick),
+    "roofline": lambda quick: roofline_table.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+
+    failed = []
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn(args.quick)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        print("FAILED:", failed)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

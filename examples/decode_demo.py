@@ -1,0 +1,14 @@
+"""Batched-serving demo across architecture families: prefill + KV-cache /
+recurrent-state decode, including the sliding-window ring cache.
+
+    PYTHONPATH=src python examples/decode_demo.py
+"""
+import subprocess
+import sys
+
+for arch in ("smollm_135m", "rwkv6_7b", "hymba_1_5b"):
+    print(f"\n=== {arch} ===")
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+         "--batch", "2", "--prompt-len", "16", "--gen", "8"],
+        check=True)

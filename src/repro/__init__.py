@@ -1,0 +1,5 @@
+"""repro — age-based client selection + NOMA resource allocation for
+communication-efficient federated learning, as a production-grade JAX
+framework (see DESIGN.md for the paper-mismatch note and architecture)."""
+
+__version__ = "0.1.0"

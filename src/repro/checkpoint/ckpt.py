@@ -1,0 +1,70 @@
+"""Checkpointing: pytree <-> npz with a JSON manifest, atomic writes,
+latest-symlink resume."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: Any, *, step: int = 0, extra: Optional[dict] = None
+         ) -> str:
+    """Atomically write ``<path>/ckpt_<step>.npz`` + manifest; returns the
+    file path."""
+    os.makedirs(path, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    fname = os.path.join(path, f"ckpt_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, fname)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    manifest = {"step": step, "file": os.path.basename(fname),
+                "extra": extra or {}}
+    mtmp = fname + ".manifest.tmp"
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, os.path.join(path, "manifest.json"))
+    return fname
+
+
+def restore(path: str, like: Any) -> tuple[Any, dict]:
+    """Restore into the structure of ``like``. Returns (tree, manifest)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, manifest["file"]))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+def latest_step(path: str) -> Optional[int]:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f)["step"]
+    except FileNotFoundError:
+        return None

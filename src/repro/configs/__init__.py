@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    FLConfig,
+    ModelConfig,
+    NOMAConfig,
+    SHAPES,
+    ShapeConfig,
+    all_configs,
+    canon,
+    get_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "FLConfig",
+    "ModelConfig",
+    "NOMAConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "all_configs",
+    "canon",
+    "get_config",
+]

@@ -1,0 +1,265 @@
+"""Config system: architecture configs, input shapes, FL/NOMA system config.
+
+Every assigned architecture from the public pool gets one module in this
+package defining ``CONFIG = ModelConfig(...)`` with the exact assigned
+hyper-parameters (source cited in brackets in each file). ``get_config``
+resolves ``--arch <id>`` strings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer-family architecture description.
+
+    ``family`` selects the assembly in ``repro.models.zoo``:
+      dense | moe | ssm | hybrid | encdec | vlm
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int            # query heads (0 for attention-free archs)
+    n_kv_heads: int         # GQA KV heads
+    d_ff: int               # per-expert FF width for MoE archs
+    vocab_size: int
+    head_dim: int = 0       # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_shard_hints: bool = False   # §Perf lever: constrain expert buffers
+                                    # (E->model, C->data) for reduce-scatter
+                                    # dispatch instead of all-reduce
+
+    # --- SSM / RWKV / hybrid ---
+    ssm_state: int = 0      # mamba-style per-channel state size
+    rwkv_head_size: int = 0  # rwkv6 head size (64 in Finch)
+
+    # --- attention details ---
+    rope_frac: float = 1.0        # fraction of head_dim with rotary applied
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0       # 0 = full attention (train/prefill/decode_32k)
+    long_context_window: int = 8192   # SWA window used for long_500k decode
+    parallel_residual: bool = False   # stablelm/gpt-neox style
+    glu: bool = True                  # gated MLP (swiglu) vs plain gelu MLP
+    qkv_bias: bool = False
+    logit_softcap: float = 0.0        # grok-style logit soft-capping
+
+    # --- encoder-decoder (audio) ---
+    n_enc_layers: int = 0
+
+    # --- multimodal stubs ---
+    n_prefix_tokens: int = 0      # vlm: image patch tokens; audio: enc frames
+    prefix_dim: int = 0           # embedding dim of stub frontend output
+
+    # --- numerics / training ---
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    def __post_init__(self) -> None:
+        if self.head_dim == 0 and self.n_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 16 so the embedding/lm_head
+        always shard over the 16-way model axis (hymba 32001, seamless
+        256206 are otherwise unshardable -> replicated logits). Padded
+        logits are masked to -inf in unembed."""
+        return self.vocab_size + (-self.vocab_size) % 16
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Natively supports 500k decode without a full KV cache."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks + head)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d
+        head = 0 if self.tie_embeddings else v * d
+        blocks = 0
+        n_dec = self.n_layers
+        hd = self.head_dim
+        for _ in range(n_dec):
+            blk = 0
+            if self.family == "ssm":  # rwkv6: time-mix + channel-mix
+                blk += 4 * d * d + d * d  # r,k,v,o + gate
+                blk += d * ff + ff * d    # channel mix (k, v)
+            else:
+                q = self.n_heads * hd
+                kv = self.n_kv_heads * hd
+                blk += d * q + 2 * d * kv + q * d  # qkvo
+                if self.family == "hybrid":
+                    blk += 2 * d * d + d * self.ssm_state * 2  # ssm branch approx
+                if self.is_moe:
+                    mlp = d * ff * (3 if self.glu else 2)
+                    blk += self.n_experts * mlp + d * self.n_experts  # + router
+                else:
+                    blk += d * ff * (3 if self.glu else 2)
+            blocks += blk
+        enc = 0
+        for _ in range(self.n_enc_layers):
+            q = self.n_heads * hd
+            kv = self.n_kv_heads * hd
+            enc += d * q + 2 * d * kv + q * d
+            enc += d * ff * (3 if self.glu else 2)
+            # decoder cross-attention counted per decoder layer
+        cross = self.n_enc_layers and n_dec * (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d)
+        return emb + head + blocks + enc + (cross or 0)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top_k experts active)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        mlp = d * ff * (3 if self.glu else 2)
+        inactive = self.n_layers * (self.n_experts - self.top_k) * mlp
+        return self.param_count() - inactive
+
+    # -- reduced variant for CPU smoke tests ------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Same family/topology, shrunk to laptop scale (<=512 d_model,
+        2 layers, <=4 experts) for the per-arch smoke tests."""
+        d = min(self.d_model, 128)
+        if self.n_heads:
+            g = max(1, self.n_heads // max(self.n_kv_heads, 1))
+            kv = 1 if g > 1 else 2
+            n_heads = kv * min(g, 4)
+            hd = 16
+        else:
+            n_heads = kv = hd = 0
+        return dataclasses.replace(
+            self,
+            n_layers=2,
+            d_model=d,
+            n_heads=n_heads,
+            n_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 4 * d),
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            n_enc_layers=2 if self.n_enc_layers else 0,
+            n_prefix_tokens=min(self.n_prefix_tokens, 8) if self.n_prefix_tokens else 0,
+            prefix_dim=d if self.prefix_dim else 0,
+            rwkv_head_size=min(self.rwkv_head_size, 16) if self.rwkv_head_size else 0,
+            long_context_window=256,
+            dtype="float32",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# FL + NOMA system config (the paper)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NOMAConfig:
+    """Uplink NOMA cell parameters. [ASSUMED] values follow the standard
+    FL-over-wireless simulation genre (see DESIGN.md section 4)."""
+
+    n_subchannels: int = 5          # K
+    users_per_subchannel: int = 2   # J (power-domain NOMA pair)
+    bandwidth_hz: float = 1e6       # B per subchannel
+    noise_density: float = 1e-20    # N0 (W/Hz) ~ -170 dBm/Hz
+    max_power_w: float = 0.2        # P_max per client (23 dBm)
+    path_loss_exp: float = 3.76
+    ref_path_loss: float = 1e-3     # at 1 m
+    cell_radius_m: float = 500.0
+    min_radius_m: float = 50.0
+    sic_order: str = "strong_first"  # uplink SIC: strongest decoded first
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_clients: int = 50
+    rounds: int = 100
+    local_epochs: int = 1
+    local_batch: int = 32
+    lr: float = 0.05
+    momentum: float = 0.0
+    dirichlet_alpha: float = 0.5     # non-IID level
+    samples_per_client: Tuple[int, int] = (200, 1200)  # min/max, uniform
+    # scheduler
+    policy: str = "age_noma"         # age_noma|random|channel|round_robin|oma_age
+    age_exponent: float = 1.0        # gamma
+    t_budget_s: float = 0.0          # 0 = no budget (pure min-round-time)
+    # client compute model
+    cpu_cycles_per_sample: float = 2e6
+    cpu_freq_range_ghz: Tuple[float, float] = (0.5, 2.0)
+    model_bits: float = 0.0          # 0 = derived from model param count * 32
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = [
+    "moonshot_v1_16b_a3b",
+    "llama4_maverick_400b_a17b",
+    "paligemma_3b",
+    "hymba_1_5b",
+    "seamless_m4t_medium",
+    "stablelm_1_6b",
+    "chatglm3_6b",
+    "smollm_135m",
+    "rwkv6_7b",
+    "grok_1_314b",
+]
+
+
+def canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

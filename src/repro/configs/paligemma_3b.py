@@ -1,0 +1,26 @@
+"""paligemma-3b — PaliGemma language backbone (Gemma-2B-style) consuming
+stubbed SigLIP patch embeddings.
+
+[arXiv:2407.07726] 18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=257216.
+The SigLIP vision tower is a STUB per the assignment carve-out:
+``input_specs()`` supplies 256 precomputed patch embeddings (prefix tokens)
+projected into d_model.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma_3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16_384,
+    vocab_size=257_216,
+    n_prefix_tokens=256,       # 224px / 14 patch -> 256 tokens
+    prefix_dim=1152,           # SigLIP-So400m output width
+    glu=True,                  # GeGLU in gemma; swiglu-equivalent here
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+)

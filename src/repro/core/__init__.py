@@ -1,0 +1,16 @@
+"""The paper's primary contribution: age-based client selection and NOMA
+resource allocation for communication-efficient federated learning.
+
+Host-side (numpy) scheduler; the device mesh consumes only the resulting
+(selection mask, aggregation weights) — see repro.fl.server.
+"""
+from repro.core import aoi, noma, roundtime, scheduler  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    RoundEnv,
+    Schedule,
+    exhaustive_pairing_reference,
+    schedule_age_noma,
+    schedule_channel_greedy,
+    schedule_random,
+    schedule_round_robin,
+)

@@ -1,0 +1,136 @@
+"""Uplink power-domain NOMA model: channel generation, SIC rates, and
+per-subchannel power allocation.
+
+All of this is host-side scheduler math (numpy): the paper's wireless layer
+is O(N*K) scalar work per round — the device mesh only ever sees the
+resulting (selection mask, weights). See DESIGN.md section 4 for the
+reconstructed formulation and the [ASSUMED] constants.
+
+Conventions: client i is the STRONG user of a pair (g_i >= g_j). Uplink SIC
+decodes the strong user first (treating the weak user as interference),
+cancels it, then decodes the weak user interference-free:
+
+    R_i = B log2(1 + p_i g_i / (p_j g_j + N0 B))
+    R_j = B log2(1 + p_j g_j / (N0 B))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import NOMAConfig
+
+
+# ---------------------------------------------------------------------------
+# topology + fading
+# ---------------------------------------------------------------------------
+
+
+def sample_distances(rng: np.random.Generator, n: int,
+                     cfg: NOMAConfig) -> np.ndarray:
+    """Uniform-in-annulus client placement around the BS."""
+    r2 = rng.uniform(cfg.min_radius_m ** 2, cfg.cell_radius_m ** 2, size=n)
+    return np.sqrt(r2)
+
+
+def sample_gains(rng: np.random.Generator, distances: np.ndarray,
+                 cfg: NOMAConfig) -> np.ndarray:
+    """Block-fading channel power gains g_n = rho0 * d^-kappa * |h|^2,
+    |h|^2 ~ Exp(1) (Rayleigh)."""
+    fading = rng.exponential(1.0, size=distances.shape)
+    return cfg.ref_path_loss * distances ** (-cfg.path_loss_exp) * fading
+
+
+# ---------------------------------------------------------------------------
+# rates
+# ---------------------------------------------------------------------------
+
+
+def noise_power(cfg: NOMAConfig) -> float:
+    return cfg.noise_density * cfg.bandwidth_hz
+
+
+def solo_rate(p: np.ndarray, g: np.ndarray, cfg: NOMAConfig) -> np.ndarray:
+    """Single user on a full subchannel (bits/s)."""
+    return cfg.bandwidth_hz * np.log2(1.0 + p * g / noise_power(cfg))
+
+
+def pair_rates(p_i: np.ndarray, p_j: np.ndarray, g_i: np.ndarray,
+               g_j: np.ndarray, cfg: NOMAConfig
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """SIC rates for a NOMA pair; i = strong user decoded first."""
+    n0b = noise_power(cfg)
+    r_i = cfg.bandwidth_hz * np.log2(1.0 + p_i * g_i / (p_j * g_j + n0b))
+    r_j = cfg.bandwidth_hz * np.log2(1.0 + p_j * g_j / n0b)
+    return r_i, r_j
+
+
+def oma_pair_rates(p_i, p_j, g_i, g_j, cfg: NOMAConfig):
+    """OMA baseline: the two users TDMA-split the subchannel (x0.5 time),
+    each transmitting at full power interference-free."""
+    n0b = noise_power(cfg)
+    r_i = 0.5 * cfg.bandwidth_hz * np.log2(1.0 + p_i * g_i / n0b)
+    r_j = 0.5 * cfg.bandwidth_hz * np.log2(1.0 + p_j * g_j / n0b)
+    return r_i, r_j
+
+
+# ---------------------------------------------------------------------------
+# power allocation
+# ---------------------------------------------------------------------------
+
+
+def pair_power_allocation(g_i: np.ndarray, g_j: np.ndarray, cfg: NOMAConfig
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Max-min-rate power allocation for a SIC pair (equal upload payload).
+
+    The strong user always transmits at P_max (raises R_i, leaves R_j
+    untouched). The weak user's power balances the two rates:
+        R_i(p_j) decreasing, R_j(p_j) increasing  =>  R_i = R_j at optimum
+    which is the positive root of  y^2 + N y - P g_i N = 0,  y = p_j g_j:
+
+        y* = (-N + sqrt(N^2 + 4 P g_i N)) / 2
+
+    clamped to P_max (then R_j < R_i and the pair is weak-limited).
+    Vectorized over pair arrays.
+    """
+    g_i = np.asarray(g_i, dtype=np.float64)
+    g_j = np.asarray(g_j, dtype=np.float64)
+    n0b = noise_power(cfg)
+    pmax = cfg.max_power_w
+    y = 0.5 * (-n0b + np.sqrt(n0b ** 2 + 4.0 * pmax * g_i * n0b))
+    p_j = np.minimum(y / np.maximum(g_j, 1e-30), pmax)
+    p_i = np.full_like(p_j, pmax)
+    return p_i, p_j
+
+
+def pair_min_rate(g_i, g_j, cfg: NOMAConfig) -> np.ndarray:
+    """min(R_i, R_j) under the max-min allocation above."""
+    p_i, p_j = pair_power_allocation(g_i, g_j, cfg)
+    r_i, r_j = pair_rates(p_i, p_j, g_i, g_j, cfg)
+    return np.minimum(r_i, r_j)
+
+
+# ---------------------------------------------------------------------------
+# pairing heuristics
+# ---------------------------------------------------------------------------
+
+
+def strong_weak_pairing(gains: np.ndarray, idx: np.ndarray
+                        ) -> list[tuple[int, int]]:
+    """Classic uplink-NOMA pairing: sort candidates by gain, pair the i-th
+    strongest with the i-th weakest. ``idx`` are client indices (even count).
+    Returns [(strong, weak), ...]."""
+    order = idx[np.argsort(-gains[idx])]
+    m = len(order) // 2
+    return [(int(order[i]), int(order[-1 - i])) for i in range(m)]
+
+
+def adjacent_pairing(gains: np.ndarray, idx: np.ndarray
+                     ) -> list[tuple[int, int]]:
+    """Alternative: pair adjacent sorted clients (worst case for NOMA —
+    similar gains). Used by ablations."""
+    order = idx[np.argsort(-gains[idx])]
+    return [(int(order[2 * i]), int(order[2 * i + 1]))
+            for i in range(len(order) // 2)]

@@ -1,0 +1,28 @@
+"""FL round-time model: local compute + uplink communication.
+
+T_n = T_cmp,n + T_com,n ;  T_round = max over selected clients
+(synchronous FL; the server aggregation time is negligible vs uplink).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def compute_times(n_samples: np.ndarray, cycles_per_sample: float,
+                  cpu_freq_hz: np.ndarray, local_epochs: int = 1
+                  ) -> np.ndarray:
+    """T_cmp,n = E * C * D_n / f_n."""
+    return local_epochs * cycles_per_sample * n_samples / cpu_freq_hz
+
+
+def comm_times(model_bits: float, rates: np.ndarray) -> np.ndarray:
+    """T_com,n = S / R_n  (rates in bits/s)."""
+    return model_bits / np.maximum(rates, 1e-9)
+
+
+def round_time(t_cmp: np.ndarray, t_com: np.ndarray,
+               selected: np.ndarray) -> float:
+    sel = np.asarray(selected, dtype=bool)
+    if not np.any(sel):
+        return 0.0
+    return float(np.max((t_cmp + t_com)[sel]))

@@ -1,0 +1,206 @@
+"""The paper's joint algorithm: age-based client selection + NOMA subchannel
+pairing + power allocation, with a round-time budget loop.
+
+Decomposition (DESIGN.md section 4):
+  1. rank clients by the age-utility  A_n^gamma * w_n;
+  2. admit the top J*K candidates;
+  3. pair strong/weak channels per subchannel (strong_weak_pairing);
+  4. closed-form max-min power allocation per pair -> rates -> round time;
+  5. if T_round exceeds the budget, evict the latency-critical client and
+     re-pair (repeat).
+
+``exhaustive_pairing_reference`` brute-forces the optimal pairing for small
+instances — used by tests/benchmarks to check near-optimality (claim C4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import FLConfig, NOMAConfig
+from repro.core import aoi, noma, roundtime
+
+
+@dataclasses.dataclass
+class RoundEnv:
+    """Per-round wireless + client state visible to the scheduler."""
+    gains: np.ndarray        # (N,) channel power gains this round
+    n_samples: np.ndarray    # (N,) local dataset sizes
+    cpu_freq: np.ndarray     # (N,) Hz
+    ages: np.ndarray         # (N,) AoU
+    model_bits: float        # uplink payload
+
+
+@dataclasses.dataclass
+class Schedule:
+    selected: np.ndarray                 # (N,) bool
+    pairs: list                          # [(strong, weak), ...]; weak=-1 solo
+    rates: np.ndarray                    # (N,) bits/s (0 unselected)
+    powers: np.ndarray                   # (N,) W
+    t_cmp: np.ndarray                    # (N,) s
+    t_com: np.ndarray                    # (N,) s
+    t_round: float
+    agg_weights: np.ndarray              # (N,) aggregation weights
+    info: dict
+
+
+# ---------------------------------------------------------------------------
+# rate assembly for a candidate set
+# ---------------------------------------------------------------------------
+
+
+def _rates_for(cand: np.ndarray, env: RoundEnv, ncfg: NOMAConfig,
+               oma: bool = False):
+    """Pair candidates, allocate power, return (pairs, rates, powers)."""
+    n = len(env.gains)
+    rates = np.zeros(n)
+    powers = np.zeros(n)
+    cand = np.asarray(cand, dtype=int)
+    solo = None
+    if len(cand) % 2 == 1:
+        # weakest-priority... give the weakest channel a solo subchannel
+        solo = int(cand[np.argmin(env.gains[cand])])
+        cand = cand[cand != solo]
+    pairs = noma.strong_weak_pairing(env.gains, cand)
+    if pairs:
+        gi = env.gains[[p[0] for p in pairs]]
+        gj = env.gains[[p[1] for p in pairs]]
+        if oma:
+            p_i = np.full(len(pairs), ncfg.max_power_w)
+            p_j = np.full(len(pairs), ncfg.max_power_w)
+            r_i, r_j = noma.oma_pair_rates(p_i, p_j, gi, gj, ncfg)
+        else:
+            p_i, p_j = noma.pair_power_allocation(gi, gj, ncfg)
+            r_i, r_j = noma.pair_rates(p_i, p_j, gi, gj, ncfg)
+        for m, (i, j) in enumerate(pairs):
+            rates[i], rates[j] = r_i[m], r_j[m]
+            powers[i], powers[j] = p_i[m], p_j[m]
+    out_pairs = [(i, j) for (i, j) in pairs]
+    if solo is not None:
+        rates[solo] = noma.solo_rate(ncfg.max_power_w, env.gains[solo], ncfg)
+        powers[solo] = ncfg.max_power_w
+        out_pairs.append((solo, -1))
+    return out_pairs, rates, powers
+
+
+def _finalize(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
+              oma: bool, info: dict) -> Schedule:
+    n = len(env.gains)
+    pairs, rates, powers = _rates_for(cand, env, ncfg, oma)
+    selected = np.zeros(n, dtype=bool)
+    selected[list(cand)] = True
+    t_cmp = roundtime.compute_times(env.n_samples,
+                                    flcfg.cpu_cycles_per_sample,
+                                    env.cpu_freq, flcfg.local_epochs)
+    t_com = roundtime.comm_times(env.model_bits, rates)
+    t_rd = roundtime.round_time(t_cmp, t_com, selected)
+    w = env.n_samples.astype(np.float64) * selected
+    w = w / max(w.sum(), 1e-12)
+    return Schedule(selected, pairs, rates, powers, t_cmp, t_com, t_rd, w,
+                    info)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+def schedule_age_noma(env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
+                      *, oma: bool = False) -> Schedule:
+    """The paper's joint algorithm (set ``oma=True`` for the age-OMA
+    ablation)."""
+    n = len(env.gains)
+    slots = ncfg.n_subchannels * ncfg.users_per_subchannel
+    w = env.n_samples / env.n_samples.sum()
+    prio = aoi.age_priority(env.ages, w, flcfg.age_exponent)
+    order = np.argsort(-(prio + 1e-12 * env.gains))  # gain tiebreak
+    cand = list(order[:min(slots, n)])
+
+    evicted = []
+    while True:
+        sched = _finalize(cand, env, ncfg, flcfg, oma,
+                          {"policy": "age_oma" if oma else "age_noma",
+                           "evicted": list(evicted)})
+        if flcfg.t_budget_s <= 0 or sched.t_round <= flcfg.t_budget_s \
+                or len(cand) <= 1:
+            return sched
+        # evict the latency-critical client, try to backfill from the queue
+        tot = (sched.t_cmp + sched.t_com) * sched.selected
+        worst = int(np.argmax(tot))
+        cand.remove(worst)
+        evicted.append(worst)
+        for nxt in order[slots:]:
+            if nxt not in cand and nxt not in evicted and len(cand) < slots:
+                cand.append(int(nxt))
+                break
+
+
+def schedule_random(rng: np.random.Generator, env: RoundEnv,
+                    ncfg: NOMAConfig, flcfg: FLConfig) -> Schedule:
+    n = len(env.gains)
+    slots = min(ncfg.n_subchannels * ncfg.users_per_subchannel, n)
+    cand = rng.choice(n, size=slots, replace=False)
+    return _finalize(cand, env, ncfg, flcfg, False, {"policy": "random"})
+
+
+def schedule_channel_greedy(env: RoundEnv, ncfg: NOMAConfig,
+                            flcfg: FLConfig) -> Schedule:
+    n = len(env.gains)
+    slots = min(ncfg.n_subchannels * ncfg.users_per_subchannel, n)
+    cand = np.argsort(-env.gains)[:slots]
+    return _finalize(cand, env, ncfg, flcfg, False, {"policy": "channel"})
+
+
+def schedule_round_robin(t: int, env: RoundEnv, ncfg: NOMAConfig,
+                         flcfg: FLConfig) -> Schedule:
+    n = len(env.gains)
+    slots = min(ncfg.n_subchannels * ncfg.users_per_subchannel, n)
+    start = (t * slots) % n
+    cand = [(start + i) % n for i in range(slots)]
+    return _finalize(cand, env, ncfg, flcfg, False, {"policy": "round_robin"})
+
+
+# ---------------------------------------------------------------------------
+# exhaustive pairing reference (claim C4)
+# ---------------------------------------------------------------------------
+
+
+def _all_pairings(items: list):
+    """Yield all perfect matchings of an even-sized list."""
+    if not items:
+        yield []
+        return
+    a = items[0]
+    for i in range(1, len(items)):
+        rest = items[1:i] + items[i + 1:]
+        for sub in _all_pairings(rest):
+            yield [(a, items[i])] + sub
+
+
+def exhaustive_pairing_reference(cand, env: RoundEnv, ncfg: NOMAConfig,
+                                 flcfg: FLConfig) -> float:
+    """Optimal round time over ALL pairings of the candidate set (per-pair
+    power allocation stays closed-form max-min, which is optimal for a fixed
+    pair). Exponential — tests only (|cand| <= 8)."""
+    cand = list(int(c) for c in cand)
+    assert len(cand) % 2 == 0 and len(cand) <= 8
+    t_cmp = roundtime.compute_times(env.n_samples,
+                                    flcfg.cpu_cycles_per_sample,
+                                    env.cpu_freq, flcfg.local_epochs)
+    best = np.inf
+    for pairing in _all_pairings(cand):
+        t_round = 0.0
+        for (a, b) in pairing:
+            i, j = (a, b) if env.gains[a] >= env.gains[b] else (b, a)
+            p_i, p_j = noma.pair_power_allocation(
+                env.gains[i:i + 1], env.gains[j:j + 1], ncfg)
+            r_i, r_j = noma.pair_rates(p_i, p_j, env.gains[i:i + 1],
+                                       env.gains[j:j + 1], ncfg)
+            t_round = max(t_round,
+                          t_cmp[i] + env.model_bits / max(float(r_i[0]), 1e-9),
+                          t_cmp[j] + env.model_bits / max(float(r_j[0]), 1e-9))
+        best = min(best, t_round)
+    return float(best)

@@ -1,0 +1,14 @@
+from repro.data.partition import ClientData, client_batches, partition_clients
+from repro.data.synthetic import (
+    TaskConfig,
+    balanced_eval_set,
+    bayes_optimal_accuracy,
+    sample_sequences,
+    topic_matrices,
+)
+
+__all__ = [
+    "ClientData", "client_batches", "partition_clients", "TaskConfig",
+    "balanced_eval_set", "bayes_optimal_accuracy", "sample_sequences",
+    "topic_matrices",
+]

@@ -1,0 +1,32 @@
+"""Server-side aggregation of client deltas.
+
+FedAvg weighted sum; the inner weighted reduction dispatches to the
+``fedagg`` Pallas kernel (TPU target) or its XLA twin via
+``repro.kernels.ops.weighted_sum`` — the server-side hot spot when client
+updates are model-sized (DESIGN.md section 3)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+def aggregate_deltas(deltas: Sequence, weights: np.ndarray, *,
+                     impl: str = "xla"):
+    """deltas: list of client update pytrees; weights: (C,) normalized.
+    Returns the aggregated pytree (weighted sum)."""
+    w = jnp.asarray(np.asarray(weights, dtype=np.float32))
+    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *deltas)
+    return jax.tree.map(lambda s: kops.weighted_sum(s, w, impl=impl), stacked)
+
+
+def apply_aggregate(params, agg_delta, server_lr: float = 1.0):
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32)
+                      + server_lr * d.astype(jnp.float32)).astype(p.dtype),
+        params, agg_delta)

@@ -1,0 +1,53 @@
+"""Client-side local training: a jit'd SGD step reused across all clients
+(same pytree structure), driven by the host round loop."""
+from __future__ import annotations
+
+import functools
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import zoo
+from repro.optim import SGD, apply_updates
+
+
+def make_sgd_batch_step(cfg: ModelConfig, lr: float, momentum: float = 0.0):
+    opt = SGD(lr=lr, momentum=momentum)
+
+    @jax.jit
+    def step(params, opt_state, tokens):
+        batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+        def loss_fn(p):
+            logits, aux = zoo.forward(cfg, p, batch, remat=False)
+            return zoo.token_loss(cfg, logits, batch["labels"], aux=aux)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state, loss
+
+    return opt, step
+
+
+class LocalTrainer:
+    """Runs E local epochs of SGD for one client, returns the model DELTA
+    (the uplink payload in the real system)."""
+
+    def __init__(self, cfg: ModelConfig, lr: float, momentum: float = 0.0):
+        self.cfg = cfg
+        self.opt, self.step = make_sgd_batch_step(cfg, lr, momentum)
+
+    def local_update(self, params, batches: Iterable[np.ndarray]):
+        p = params
+        opt_state = self.opt.init(params)
+        losses = []
+        for tokens in batches:
+            p, opt_state, loss = self.step(p, opt_state, jnp.asarray(tokens))
+            losses.append(float(loss))
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            p, params)
+        return delta, (float(np.mean(losses)) if losses else 0.0)

@@ -1,0 +1,38 @@
+"""Experiment drivers: run one policy or compare all (the paper's figures)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import FLConfig, ModelConfig, NOMAConfig
+from repro.data import TaskConfig
+from repro.fl.server import FLServer, History
+
+POLICIES = ("age_noma", "age_noma_budget", "random", "channel",
+            "round_robin", "oma_age")
+
+
+def run_experiment(model_cfg: ModelConfig, fl: FLConfig, nomacfg: NOMAConfig,
+                   task: TaskConfig, policy: str, *, rounds=None,
+                   verbose=False, seed=None, agg_impl="xla") -> History:
+    server = FLServer(model_cfg, fl, nomacfg, task, policy=policy,
+                      seed=seed, agg_impl=agg_impl)
+    return server.run(rounds, verbose=verbose)
+
+
+def compare_policies(model_cfg: ModelConfig, fl: FLConfig,
+                     nomacfg: NOMAConfig, task: TaskConfig, *,
+                     policies=POLICIES, rounds=None, verbose=False,
+                     seed=None) -> dict[str, History]:
+    """Same seed => identical client data/topology across policies; only the
+    selection/RA differs (paired comparison, as the paper's figures do)."""
+    return {p: run_experiment(model_cfg, fl, nomacfg, task, p, rounds=rounds,
+                              verbose=verbose, seed=seed)
+            for p in policies}
+
+
+def time_to_accuracy(hist: History, target: float) -> Optional[float]:
+    """Simulated seconds to first reach ``target`` accuracy (None = never)."""
+    for t, a in zip(hist.sim_time, hist.accuracy):
+        if a >= target:
+            return t
+    return None

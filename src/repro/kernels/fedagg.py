@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: age/size-weighted aggregation of stacked client
+updates — the FedAvg server hot spot.
+
+    out[n] = sum_c w[c] * updates[c, n]
+
+Arithmetic intensity is ~1 flop/byte, so the design is BANDWIDTH-oriented
+(DESIGN.md section 3): the N axis is tiled into VMEM-resident blocks
+(default 64k floats = 256 KiB fp32 per operand-row set, C rows double-
+buffered by the pipeline), and the per-block reduction is a (1,C)x(C,BN)
+matmul that maps onto the MXU with the C axis zero-padded to the 128-lane
+systolic edge by Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 65_536  # fp32 elements per tile; C * BLOCK_N * 4B must fit VMEM
+
+
+def _fedagg_kernel(w_ref, u_ref, o_ref):
+    # w_ref (1, C) fp32; u_ref (C, BN); o_ref (1, BN)
+    w = w_ref[...]                        # (1, C)
+    u = u_ref[...].astype(jnp.float32)    # (C, BN)
+    o_ref[...] = jnp.dot(w, u, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fedagg_pallas(updates, weights, *, block_n: int = BLOCK_N,
+                  interpret: bool = False):
+    """updates (C, N) any float dtype; weights (C,) fp32 -> (N,) fp32.
+    N must be a multiple of ``block_n`` (ops.weighted_sum pads)."""
+    c, n = updates.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        _fedagg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((c, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32).reshape(1, c), updates)
+    return out[0]

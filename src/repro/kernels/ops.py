@@ -1,0 +1,73 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``impl``:
+  "xla"      pure-jnp implementation (default on CPU; what the dry-run and
+             the FL runtime use on this container)
+  "pallas"   the TPU kernel (compiled for TPU targets)
+  "interpret" the TPU kernel executed by the Pallas interpreter on CPU —
+             used by the correctness tests to validate the kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedagg as _fedagg
+from repro.kernels import ref as _ref
+from repro.kernels import swa as _swa
+from repro.kernels import wkv6 as _wkv6
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def weighted_sum(stacked, weights, *, impl: str = "xla",
+                 block_n: int = 65_536):
+    """stacked (C, *shape); weights (C,) -> (*shape,) fp32 weighted sum."""
+    c = stacked.shape[0]
+    flat = stacked.reshape(c, -1)
+    if impl == "xla":
+        out = _ref.weighted_sum_ref(flat, weights)
+    else:
+        n = flat.shape[1]
+        bn = min(block_n, max(512, 1 << (n - 1).bit_length()))
+        padded, orig = _pad_to(flat, 1, bn)
+        out = _fedagg.fedagg_pallas(padded, weights, block_n=bn,
+                                    interpret=(impl == "interpret"))[:orig]
+    return out.reshape(stacked.shape[1:])
+
+
+def wkv6(r, k, v, w_log, u, s0=None, *, impl: str = "xla", chunk: int = 64):
+    """Chunked RWKV6. Returns (out (B,H,T,C) fp32, s_T). The Pallas path
+    currently supports zero initial state (training segments)."""
+    b, h, t, c = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, c, c), jnp.float32)
+    if impl == "xla":
+        return _ref.wkv6_ref(r, k, v, w_log, u, s0)
+    out = _wkv6.wkv6_pallas(r, k, v, w_log, u, chunk=chunk,
+                            interpret=(impl == "interpret"))
+    # the Pallas kernel carries state internally; recompute s_T cheaply from
+    # the ref recurrence only when the caller needs it is wasteful — instead
+    # derive s_T from the last chunk analytically is equivalent; for the
+    # framework integration (training, fresh segments) s_T is unused.
+    return out, None
+
+
+def swa(q, k, v, *, window: int, impl: str = "xla", softcap: float = 0.0,
+        bq: int = 256, bk: int = 256):
+    """Sliding-window attention."""
+    if impl == "xla":
+        return _ref.swa_ref(q, k, v, window)
+    return _swa.swa_pallas(q, k, v, window=window, bq=bq, bk=bk,
+                           softcap=softcap,
+                           interpret=(impl == "interpret"))

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: sliding-window flash attention (the long_500k
+sub-quadratic path for full-attention architectures).
+
+Windowed BlockSpec index maps (DESIGN.md section 3): for query block j the
+kernel visits only the ceil((W+BQ)/BK) KV blocks that can intersect the
+band  (i-W, i] — compute is O(S*W), not O(S^2). Out-of-range visits (the
+clamp at the left edge) are fully masked and contribute zeros.
+
+Grid: (B*H, S/BQ, (W+BQ)/BK) — the KV axis is innermost/sequential, with
+running-softmax statistics (m, l, acc) carried in VMEM scratch.
+GQA is handled by indexing the KV head h // (H/KH) in the index maps.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 256
+BK = 256
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                window: int, bq: int, bk: int, nkv_steps: int, seq: int,
+                softcap: float):
+    j = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (BQ, hd)
+    k = k_ref[0].astype(jnp.float32)          # (BK, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    hd = q.shape[-1]
+    s = jnp.dot(q * (1.0 / math.sqrt(hd)), k.T,
+                preferred_element_type=jnp.float32)   # (BQ, BK)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # absolute positions of this block pair
+    q_pos = j * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    first_kv_block = j * bq // bk - (window // bk)
+    kv_block = jnp.maximum(first_kv_block + t, 0)
+    k_pos = kv_block * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    # duplicate visits after the left-edge clamp are masked off: block t is
+    # valid only if it is the t-th distinct block, i.e. first+t >= 0
+    valid = (first_kv_block + t) >= 0
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window) & valid
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == nkv_steps - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "bq", "bk", "interpret",
+                                    "softcap"))
+def swa_pallas(q, k, v, *, window: int, bq: int = BQ, bk: int = BK,
+               softcap: float = 0.0, interpret: bool = False):
+    """q (B,S,H,hd), k/v (B,S,KH,hd) -> (B,S,H,hd) in q.dtype.
+    Causal sliding-window attention, window positions back (inclusive of
+    self). S % bq == 0, window % bk == 0, bq % bk == 0 required."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and window % bk == 0 and bq % bk == 0, \
+        (s, bq, bk, window)
+    nkv_steps = (window + bq) // bk
+    # layout: (B*H, S, hd) for q/out; (B*KH, S, hd) for kv
+    qr = jnp.moveaxis(q, 2, 1).reshape(b * h, s, hd)
+    kr = jnp.moveaxis(k, 2, 1).reshape(b * kh, s, hd)
+    vr = jnp.moveaxis(v, 2, 1).reshape(b * kh, s, hd)
+
+    def q_index(i, j, t):
+        return (i, j, 0)
+
+    def kv_index(i, j, t):
+        bidx = i // h
+        kvh = (i % h) // g
+        first = j * bq // bk - window // bk
+        blk = jnp.maximum(first + t, 0)
+        return (bidx * kh + kvh, blk, 0)
+
+    grid = (b * h, s // bq, nkv_steps)
+    kernel = functools.partial(_swa_kernel, window=window, bq=bq, bk=bk,
+                               nkv_steps=nkv_steps, seq=s, softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), q_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), q_index),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return jnp.moveaxis(out.reshape(b, h, s, hd), 1, 2)

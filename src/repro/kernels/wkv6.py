@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: chunked RWKV6 WKV recurrence.
+
+TPU adaptation (DESIGN.md section 3): the CUDA RWKV kernel is a per-thread
+serial recurrence; on TPU we restructure it CHUNKWISE so the inner work is
+(L x C)-shaped matmuls on the MXU, with the (C x C) state carried in a VMEM
+scratch across the sequential chunk axis of the grid (TPU grids execute
+minor-most-last, sequentially per core, which makes the scratch carry
+legal — the canonical Pallas linear-attention pattern).
+
+Grid: (B*H, T/L). Scratch: state (C, C) fp32, reset at chunk 0.
+Within a chunk (time L, head dim C):
+
+    lp      = cumsum(w_log)                   (L, C)  inclusive
+    q~_t    = r_t * exp(lp_{t-1})             decay back to chunk start
+    inter   = q~ @ S                          (L, C)
+    A[t,s]  = sum_c r_tc k_sc exp(lp_{t-1,c} - lp_{s,c})   (strictly lower)
+    A[t,t]  = sum_c r_tc u_c k_tc             (bonus diagonal)
+    out     = inter + A @ V
+    S_new   = diag(exp(lp_L)) S + (K * exp(lp_L - lp))^T V
+
+All decay factors are exp of non-positive differences -> no cumprod
+underflow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scratch):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    r = r_ref[0].astype(jnp.float32)          # (L, C)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    wl = w_ref[0].astype(jnp.float32)         # (L, C) log decays <= 0
+    u = u_ref[0].astype(jnp.float32)          # (1, C) -> broadcast
+    s = s_scratch[...]                        # (C, C)
+
+    lp = jnp.cumsum(wl, axis=0)               # (L, C)
+    lp_prev = lp - wl
+    q_dec = r * jnp.exp(lp_prev)
+    inter = jnp.dot(q_dec, s, preferred_element_type=jnp.float32)
+
+    l = r.shape[0]
+    # pairwise decay exp(lp_prev[t] - lp[s]) contracted with r,k per channel
+    dmat = jnp.exp(jnp.clip(lp_prev[:, None, :] - lp[None, :, :], None, 0.0))
+    a = jnp.einsum("tc,sc,tsc->ts", r, k, dmat)
+    row = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    a = jnp.where(col < row, a, 0.0)
+    bonus = jnp.sum(r * u * k, axis=-1)        # (L,)
+    a = a + jnp.where(col == row, bonus[:, None], 0.0)
+    out = inter + jnp.dot(a, v, preferred_element_type=jnp.float32)
+    o_ref[0] = out
+
+    dec_all = jnp.exp(lp[-1])                  # (C,)
+    k_dec = k * jnp.exp(lp[-1][None, :] - lp)  # (L, C)
+    s_scratch[...] = dec_all[:, None] * s + jnp.dot(
+        k_dec.T, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w_log, u, *, chunk: int = CHUNK,
+                interpret: bool = False):
+    """r,k,v,w_log (B,H,T,C); u (H,C). Zero initial state.
+    Returns out (B,H,T,C) fp32. T must be a multiple of ``chunk``."""
+    b, h, t, c = r.shape
+    assert t % chunk == 0, (t, chunk)
+    bh = b * h
+    resh = lambda x: x.reshape(bh, t, c)
+    r2, k2, v2, w2 = (resh(x) for x in (r, k, v, w_log))
+    u2 = jnp.broadcast_to(u[None], (b, h, c)).reshape(bh, 1, c)
+
+    grid = (bh, t // chunk)
+    seq_spec = pl.BlockSpec((1, chunk, c), lambda i, j: (i, j, 0))
+    out = pl.pallas_call(
+        _wkv6_kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, 1, c), lambda i, j: (i, 0, 0))],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, t, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((c, c), jnp.float32)],
+        interpret=interpret,
+    )(r2, k2, v2, w2, u2)
+    return out.reshape(b, h, t, c)

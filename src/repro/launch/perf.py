@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb runner: compile a named variant list for one
+(arch x shape) pair and tabulate the roofline deltas.
+
+    PYTHONPATH=src python -m repro.launch.perf --pair grok_train
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import dryrun_one
+
+# hypothesis -> change, per hillclimb pair (see EXPERIMENTS.md §Perf for
+# the napkin math and the confirmed/refuted log)
+PAIRS = {
+    "grok_train": {
+        "arch": "grok_1_314b", "shape": "train_4k",
+        "variants": [
+            {"note": "baseline"},
+            {"note": "bf16_accum", "accum_dtype": "bfloat16"},
+            {"note": "act_model_shard", "act_model_shard": True},
+            {"note": "bf16+actshard", "accum_dtype": "bfloat16",
+             "act_model_shard": True},
+            {"note": "bf16+actshard+cap1.0", "accum_dtype": "bfloat16",
+             "act_model_shard": True, "capacity_factor": 1.0},
+        ],
+    },
+    "llama4_prefill": {
+        "arch": "llama4_maverick_400b_a17b", "shape": "prefill_32k",
+        "variants": [
+            {"note": "baseline"},
+            {"note": "cap1.0", "capacity_factor": 1.0},
+            {"note": "moe_hints", "moe_shard_hints": True},
+            {"note": "moe_hints+cap1.0", "moe_shard_hints": True,
+             "capacity_factor": 1.0},
+            {"note": "ring_attn", "ring_attn": True},
+            {"note": "ring_attn+cap1.0", "ring_attn": True,
+             "capacity_factor": 1.0},
+        ],
+    },
+    "smollm_train": {
+        "arch": "smollm_135m", "shape": "train_4k",
+        "variants": [
+            {"note": "baseline"},
+            {"note": "micro1", "micro": 1},
+            {"note": "bf16_accum", "accum_dtype": "bfloat16"},
+            {"note": "actshard", "act_model_shard": True},
+        ],
+    },
+}
+
+
+def run_pair(name: str, out_dir: str = "experiments/perf"):
+    spec = PAIRS[name]
+    rows = []
+    for variant in spec["variants"]:
+        rec = dryrun_one(spec["arch"], spec["shape"], variant=variant)
+        rows.append(rec)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{'variant':24s} {'mem/chip':>9s} {'t_c_s':>8s} {'t_m_s':>8s} "
+          f"{'t_floor':>8s} {'t_l_s':>8s}")
+    for r in rows:
+        print(f"{r['note']:24s} {r['memory_per_chip']/2**30:8.2f}G "
+              f"{r['t_compute']:8.2f} {r['t_memory']:8.2f} "
+              f"{r['t_memory_floor']:8.3f} {r['t_collective']:8.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=list(PAIRS))
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    run_pair(args.pair, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import zoo  # noqa: F401

@@ -1,0 +1,248 @@
+"""Encoder-decoder assembly (seamless-m4t family): bidirectional encoder
+over stubbed frontend frame embeddings + causal decoder with cross-attention.
+
+The speech frontend (mel + conformer conv) is a STUB per the assignment
+carve-out — the encoder consumes precomputed frame embeddings
+(B, n_frames, prefix_dim) from ``input_specs()``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_xattn_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    attn, attn_s = L.init_attention(ks[0], cfg, dtype)
+    xattn, xattn_s = L.init_attention(ks[1], cfg, dtype)
+    mlp, mlp_s = L.init_mlp(ks[2], cfg, dtype)
+    d = cfg.d_model
+    params = {"ln1": L.ones_init((d,), jnp.float32), "attn": attn,
+              "lnx": L.ones_init((d,), jnp.float32), "xattn": xattn,
+              "ln2": L.ones_init((d,), jnp.float32), "mlp": mlp}
+    specs = {"ln1": ("embed",), "attn": attn_s, "lnx": ("embed",),
+             "xattn": xattn_s, "ln2": ("embed",), "mlp": mlp_s}
+    return params, specs
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    attn, attn_s = L.init_attention(ks[0], cfg, dtype)
+    mlp, mlp_s = L.init_mlp(ks[1], cfg, dtype)
+    d = cfg.d_model
+    params = {"ln1": L.ones_init((d,), jnp.float32), "attn": attn,
+              "ln2": L.ones_init((d,), jnp.float32), "mlp": mlp}
+    specs = {"ln1": ("embed",), "attn": attn_s, "ln2": ("embed",),
+             "mlp": mlp_s}
+    return params, specs
+
+
+def init_encdec(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_enc, k_dec, k_head, k_proj = jax.random.split(key, 5)
+
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    enc_blocks = jax.vmap(lambda k: _init_enc_block(k, cfg, dtype)[0])(enc_keys)
+    _, enc_specs = _init_enc_block(k_enc, cfg, dtype)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    dec_blocks = jax.vmap(lambda k: _init_xattn_block(k, cfg, dtype)[0])(dec_keys)
+    _, dec_specs = _init_xattn_block(k_dec, cfg, dtype)
+
+    stack = lambda s: jax.tree.map(lambda t: ("layers",) + tuple(t), s,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    d = cfg.d_model
+    params = {
+        "frontend_proj": L.dense_init(k_proj, (cfg.prefix_dim, d), dtype),
+        "enc_blocks": enc_blocks,
+        "enc_norm": L.ones_init((d,), jnp.float32),
+        "embed": L.dense_init(k_emb, (cfg.padded_vocab, d), dtype,
+                              scale=d ** -0.5),
+        "dec_blocks": dec_blocks,
+        "norm_f": L.ones_init((d,), jnp.float32),
+        "lm_head": L.dense_init(k_head, (d, cfg.padded_vocab), dtype),
+    }
+    specs = {
+        "frontend_proj": (None, "embed"),
+        "enc_blocks": stack(enc_specs),
+        "enc_norm": ("embed",),
+        "embed": ("vocab", "embed"),
+        "dec_blocks": stack(dec_specs),
+        "norm_f": ("embed",),
+        "lm_head": ("embed", "vocab"),
+    }
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params, frames, *, remat: bool = True,
+           block_pspecs=None, act_spec=None):
+    """frames (B, P, prefix_dim) -> memory (B, P, D)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"]
+    b, p, _ = x.shape
+    x = x + L.sinusoid_pos_emb(jnp.arange(p), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.tile(jnp.arange(p)[None], (b, 1))
+    lspecs = (T.layer_pspecs(block_pspecs["enc_blocks"])
+              if block_pspecs is not None else None)
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+
+    def body(x, lp):
+        if lspecs is not None:
+            lp = jax.lax.with_sharding_constraint(lp, lspecs)
+        if act_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, act_spec)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["attn"], h, cfg)
+        out = L.flash_attention(q, k, v, cfg, causal=False)
+        x = x + L.out_proj(lp["attn"], out)
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.apply_mlp(lp["mlp"], h2, cfg)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg, p, memory):
+    b, s, _ = memory.shape
+    k = (memory @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (memory @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if "bk" in p:
+        k = k + p["bk"].reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = v + p["bv"].reshape(cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _cross_attend(cfg, p, x, mem_k, mem_v):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    if "bq" in p:
+        q = q + p["bq"].reshape(cfg.n_heads, cfg.head_dim)
+    out = L.flash_attention(q, mem_k, mem_v, cfg, causal=False)
+    return L.out_proj(p, out)
+
+
+# ---------------------------------------------------------------------------
+# decoder (teacher-forced / decode)
+# ---------------------------------------------------------------------------
+
+
+def encdec_forward(cfg: ModelConfig, params, frames, tokens, *,
+                   remat: bool = True, collect_cache: bool = False,
+                   window: int = 0, last_only: bool = False,
+                   block_pspecs=None, act_spec=None):
+    """Training/prefill forward. Returns (logits, aux[, cache])."""
+    memory = encode(cfg, params, frames, remat=remat,
+                    block_pspecs=block_pspecs, act_spec=act_spec)
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    x = x + L.sinusoid_pos_emb(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.tile(jnp.arange(s)[None], (b, 1))
+    lspecs = (T.layer_pspecs(block_pspecs["dec_blocks"])
+              if block_pspecs is not None else None)
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+
+    def body(x, lp):
+        if lspecs is not None:
+            lp = jax.lax.with_sharding_constraint(lp, lspecs)
+        if act_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, act_spec)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["attn"], h, cfg)
+        out = L.flash_attention(q, k, v, cfg, causal=True, window=window)
+        x = x + L.out_proj(lp["attn"], out)
+        hx = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        mk, mv = _cross_kv(cfg, lp["xattn"], memory)
+        x = x + _cross_attend(cfg, lp["xattn"], hx, mk, mv)
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.apply_mlp(lp["mlp"], h2, cfg)
+        ys = {}
+        if collect_cache:
+            ys = {"k": k, "v": v, "pos": positions.astype(jnp.int32),
+                  "xk": mk, "xv": mv}
+        return x, ys
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+    if last_only:
+        x = x[:, -1:]
+    logits = T.unembed(cfg, params, x)
+    aux = jnp.zeros((), jnp.float32)
+    if collect_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    nl, kh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((nl, batch, max_len, kh, hd), dtype),
+        "v": jnp.zeros((nl, batch, max_len, kh, hd), dtype),
+        "pos": jnp.full((nl, batch, max_len), -1, jnp.int32),
+        "xk": jnp.zeros((nl, batch, cfg.n_prefix_tokens, kh, hd), dtype),
+        "xv": jnp.zeros((nl, batch, cfg.n_prefix_tokens, kh, hd), dtype),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig):
+    return {
+        "k": ("layers", "batch", "kvseq", "kvheads", None),
+        "v": ("layers", "batch", "kvseq", "kvheads", None),
+        "pos": ("layers", "batch", "kvseq"),
+        "xk": ("layers", "batch", None, "kvheads", None),
+        "xv": ("layers", "batch", None, "kvheads", None),
+    }
+
+
+def encdec_decode(cfg: ModelConfig, params, cache, token, pos, *,
+                  ring: bool = False):
+    """One decode step against (self-cache + fixed cross-KV)."""
+    x = params["embed"][token][:, None, :]
+    x = x + L.sinusoid_pos_emb(jnp.array([pos]), cfg.d_model)[None].astype(
+        x.dtype)
+
+    def body(x, blk):
+        lp, lc = blk
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["attn"], h, cfg)
+        ck, cv, cp = L.cache_write(lc["k"], lc["v"], lc["pos"], k, v, pos,
+                                   ring)
+        window = cfg.long_context_window if ring else 0
+        valid = cp >= 0
+        if window:
+            valid = valid & (cp > pos - window)
+        attn = L.decode_attention(q, ck, cv, valid, cfg)
+        x = x + L.out_proj(lp["attn"], attn)
+        hx = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        b = x.shape[0]
+        qx = (hx @ lp["xattn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        xvalid = jnp.ones((b, lc["xk"].shape[1]), bool)
+        xa = L.decode_attention(qx, lc["xk"], lc["xv"], xvalid, cfg)
+        x = x + L.out_proj(lp["xattn"], xa)
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.apply_mlp(lp["mlp"], h2, cfg)
+        return x, {"k": ck, "v": cv, "pos": cp, "xk": lc["xk"],
+                   "xv": lc["xv"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    logits = T.unembed(cfg, params, x[:, 0, :])
+    return logits, new_cache

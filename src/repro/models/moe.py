@@ -1,0 +1,108 @@
+"""Capacity-based top-k Mixture-of-Experts (Switch/GShard-style einsum
+dispatch) with expert-parallel sharding.
+
+TPU adaptation note (DESIGN.md section 3): instead of torch-style
+index-select + all-to-all, dispatch/combine are expressed as dense einsums
+over a (tokens, experts, capacity) one-hot — the canonical JAX/pjit MoE
+formulation. With the expert axis sharded on the ``model`` mesh axis, the
+SPMD partitioner emits the all-to-all-equivalent collectives automatically.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    params = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),  # fp32 router
+        "wi": dense_init(ks[1], (e, d, f), dtype),
+        "wg": dense_init(ks[2], (e, d, f), dtype),
+        "wo": dense_init(ks[3], (e, f, d), dtype, scale=1.0 / math.sqrt(f)),
+    }
+    specs = {
+        "router": ("embed", None),
+        "wi": ("expert", "embed", "expert_mlp"),
+        "wg": ("expert", "embed", "expert_mlp"),
+        "wo": ("expert", "expert_mlp", "embed"),
+    }
+    return params, specs
+
+
+def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts
+                        * cfg.capacity_factor))
+    return max(cap, cfg.top_k)
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Tokens beyond per-expert capacity are dropped (residual passes them
+    through untouched, standard Switch behaviour).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(t, cfg)
+
+    xt = x.reshape(t, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)      # renorm
+
+    # position of each (token, choice) in its expert's queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)      # (T,k,E)
+    # priority: choice 0 of every token precedes choice 1, etc.
+    flat = onehot.transpose(1, 0, 2).reshape(k * t, e)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat            # (k*T,E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(k, t).T  # (T,k)
+    keep = pos < cap
+
+    # aux load-balance loss (Switch eq. 4)
+    density = jnp.mean(onehot[:, 0, :].astype(jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * e
+
+    gate_vals = jnp.where(keep, gate_vals, 0.0)
+
+    # scatter dispatch: slot = expert * cap + pos, with one overflow slot at
+    # the end for dropped tokens. No dense (T,E,C) tensors (DESIGN.md §3).
+    slot = jnp.where(keep, gate_idx * cap + pos, e * cap)      # (T,k)
+    xin_flat = jnp.zeros((e * cap + 1, d), x.dtype)
+    src = jnp.broadcast_to(xt[:, None, :], (t, k, d)).reshape(t * k, d)
+    xin_flat = xin_flat.at[slot.reshape(-1)].add(src)
+    xin = xin_flat[:e * cap].reshape(e, cap, d)                # (E,C,D)
+
+    def hint(z, spec):
+        if not cfg.moe_shard_hints:
+            return z
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(z, P(*spec))
+
+    # E on model when divisible; capacity sharded over data -> the cross-
+    # axis dispatch reduction can lower as reduce-scatter, not all-reduce
+    xin = hint(xin, ("model" if e % 16 == 0 else None, "data", None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", xin, p["wi"])
+    xout = jnp.einsum("ecf,efd->ecd", h, p["wo"])              # (E,C,D)
+    xout = hint(xout, ("model" if e % 16 == 0 else None, "data", None))
+
+    # gather back per (token, choice) with dropped tokens masked
+    e_idx = gate_idx                                           # (T,k)
+    c_idx = jnp.minimum(pos, cap - 1)
+    gathered = xout[e_idx, c_idx]                              # (T,k,D)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    out = jnp.sum(gathered * gate_vals[..., None].astype(x.dtype), axis=1)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,231 @@
+"""RWKV-6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)  is evaluated CHUNKWISE:
+within a chunk the contribution is a pair of (L x L) / (L x C) matmuls (MXU
+friendly), across chunks a short ``lax.scan`` carries the (C x C) state.
+All decay factors are formed as exp of *differences* of cumulative
+log-decays, which are non-positive by construction — no underflow of raw
+cumprods (see ``repro/kernels/wkv6.py`` for the Pallas twin and
+``repro/kernels/ref.py`` for the naive recurrent oracle).
+
+[ASSUMED] simplification vs the full Finch block: the token-shift mixing
+coefficients for r/k/v/g are static learned vectors (RWKV-5 style); the
+data-dependent LoRA is kept where it defines the paper's headline feature —
+the per-token decay w_t.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, zeros_init
+
+WKV_CHUNK = 128
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    lora = max(32, d // 64)
+    ks = jax.random.split(key, 8)
+    params = {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),   # shift-mix for r,k,v,w,g
+        "wr": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wg": dense_init(ks[3], (d, d), dtype),
+        "wo": dense_init(ks[4], (d, d), dtype, scale=1.0 / math.sqrt(d)),
+        # data-dependent decay LoRA: w_t = w0 + tanh(x W_a) W_b
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "wa": dense_init(ks[5], (d, lora), dtype),
+        "wb": dense_init(ks[6], (lora, d), dtype, scale=0.01),
+        "u": dense_init(ks[7], (h, hs), jnp.float32, scale=0.5),  # bonus
+        "ln_w": jnp.ones((d,), jnp.float32),          # per-head groupnorm
+    }
+    specs = {
+        "mu": (None, "embed"),
+        "wr": ("embed", "heads_d"), "wk": ("embed", "heads_d"),
+        "wv": ("embed", "heads_d"), "wg": ("embed", "heads_d"),
+        "wo": ("heads_d", "embed"),
+        "w0": ("heads_d",), "wa": ("embed", None), "wb": (None, "heads_d"),
+        "u": ("rwkv_heads", None), "ln_w": ("heads_d",),
+    }
+    return params, specs
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params = {
+        "mu": 0.5 * jnp.ones((2, d), jnp.float32),    # shift-mix for k, r
+        "wk": dense_init(ks[0], (d, f), dtype),
+        "wv": dense_init(ks[1], (f, d), dtype, scale=1.0 / math.sqrt(f)),
+        "wr": dense_init(ks[2], (d, d), dtype),
+    }
+    specs = {"mu": (None, "embed"), "wk": ("embed", "mlp"),
+             "wv": ("mlp", "embed"), "wr": ("embed", "embed2")}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV6
+# ---------------------------------------------------------------------------
+
+
+def wkv6_chunked(r, k, v, w_log, u, s0, chunk: int = WKV_CHUNK):
+    """r,k,v (B,H,T,C); w_log (B,H,T,C) NON-POSITIVE log-decays;
+    u (H,C) bonus; s0 (B,H,C,C) initial state.
+    Returns out (B,H,T,C) fp32, s_T (B,H,C,C)."""
+    b, h, t, c = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+
+    rr = r.reshape(b, h, n, chunk, c).astype(jnp.float32)
+    kk = k.reshape(b, h, n, chunk, c).astype(jnp.float32)
+    vv = v.reshape(b, h, n, chunk, c).astype(jnp.float32)
+    ww = w_log.reshape(b, h, n, chunk, c).astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+
+    def step(s, inp):
+        rc, kc, vc, wc = inp                     # (B,H,L,C)
+        lp = jnp.cumsum(wc, axis=2)              # inclusive cumulative log-w
+        lp_prev = lp - wc                        # exclusive
+        q_dec = rc * jnp.exp(lp_prev)
+        inter = jnp.einsum("bhtc,bhcd->bhtd", q_dec, s)
+        # intra-chunk pair decays exp(lp_prev[t] - lp[s]) for s < t
+        dmat = jnp.exp(jnp.clip(lp_prev[:, :, :, None, :]
+                                - lp[:, :, None, :, :], None, 0.0))
+        a = jnp.einsum("bhtc,bhsc,bhtsc->bhts", rc, kc, dmat)
+        a = jnp.where(tri[None, None], a, 0.0)
+        bonus = jnp.einsum("bhtc,hc,bhtc->bht", rc, u.astype(jnp.float32), kc)
+        a = a + jnp.eye(chunk)[None, None] * bonus[:, :, :, None]
+        out = inter + jnp.einsum("bhts,bhsd->bhtd", a, vc)
+        # state update
+        dec_all = jnp.exp(lp[:, :, -1])                        # (B,H,C)
+        k_dec = kc * jnp.exp(lp[:, :, -1:, :] - lp)            # (B,H,L,C)
+        s_new = dec_all[..., None] * s \
+            + jnp.einsum("bhsc,bhsd->bhcd", k_dec, vc)
+        return s_new, out
+
+    s_t, outs = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (jnp.moveaxis(rr, 2, 0), jnp.moveaxis(kk, 2, 0),
+         jnp.moveaxis(vv, 2, 0), jnp.moveaxis(ww, 2, 0)))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, t, c)
+    return out, s_t
+
+
+def wkv6_step(r, k, v, w_log, u, s):
+    """Single decode step: r,k,v,w_log (B,H,C); s (B,H,C,C)."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    out = jnp.einsum("bhc,bhcd->bhd", rf, s) \
+        + jnp.einsum("bhc,hc,bhc,bhd->bhd", rf, u.astype(jnp.float32), kf, vf)
+    s_new = jnp.exp(w_log.astype(jnp.float32))[..., None] * s \
+        + kf[..., None] * vf[..., None, :]
+    return out, s_new
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _shift(x, prev):
+    """Token shift: returns per-position previous token. x (B,S,D),
+    prev (B,D) = last token of the previous segment."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _head_groupnorm(x, w, n_heads, eps=64e-5):
+    """x (B,S,D) normalized per head group."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mean = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, s, d) * w.astype(jnp.float32))
+
+
+def time_mix(p, x, cfg: ModelConfig, shift_prev, wkv_state, *, chunk=WKV_CHUNK):
+    """x (B,S,D). Returns (out, new_shift (B,D), new_wkv_state)."""
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    xs = _shift(x, shift_prev)
+    xr = _mix(x, xs, p["mu"][0])
+    xk = _mix(x, xs, p["mu"][1])
+    xv = _mix(x, xs, p["mu"][2])
+    xw = _mix(x, xs, p["mu"][3])
+    xg = _mix(x, xs, p["mu"][4])
+
+    def heads(z):
+        return z.reshape(b, s, h, hs).transpose(0, 2, 1, 3)  # (B,H,S,C)
+
+    r = heads(xr @ p["wr"])
+    k = heads(xk @ p["wk"])
+    v = heads(xv @ p["wv"])
+    g = xg @ p["wg"]
+    # data-dependent decay (Finch): log w_t = -exp(w0 + lora(x))
+    wt = p["w0"] + (jnp.tanh(xw @ p["wa"]) @ p["wb"]).astype(jnp.float32)
+    w_log = -jnp.exp(jnp.clip(wt, -8.0, 4.0))            # (B,S,D), <= 0
+    w_log = heads(w_log)
+
+    out, s_new = wkv6_chunked(r, k, v, w_log, p["u"], wkv_state, chunk=chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)     # (B,S,D)
+    out = _head_groupnorm(out, p["ln_w"], h)
+    out = (out * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    return out @ p["wo"], x[:, -1, :], s_new
+
+
+def time_mix_step(p, x, cfg: ModelConfig, shift_prev, wkv_state):
+    """Decode: x (B,1,D)."""
+    b, _, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    xs = shift_prev[:, None, :]
+    xr = _mix(x, xs, p["mu"][0])[:, 0]
+    xk = _mix(x, xs, p["mu"][1])[:, 0]
+    xv = _mix(x, xs, p["mu"][2])[:, 0]
+    xw = _mix(x, xs, p["mu"][3])[:, 0]
+    xg = _mix(x, xs, p["mu"][4])[:, 0]
+    r = (xr @ p["wr"]).reshape(b, h, hs)
+    k = (xk @ p["wk"]).reshape(b, h, hs)
+    v = (xv @ p["wv"]).reshape(b, h, hs)
+    g = xg @ p["wg"]
+    wt = p["w0"] + (jnp.tanh(xw @ p["wa"]) @ p["wb"]).astype(jnp.float32)
+    w_log = -jnp.exp(jnp.clip(wt, -8.0, 4.0))
+    w_log = w_log.reshape(b, h, hs)
+    out, s_new = wkv6_step(r, k, v, w_log, p["u"], wkv_state)
+    out = out.reshape(b, 1, d)
+    out = _head_groupnorm(out, p["ln_w"], h)
+    out = (out * jax.nn.silu(g.astype(jnp.float32))[:, None]).astype(x.dtype)
+    return out[:, 0][:, None] @ p["wo"], x[:, 0, :], s_new
+
+
+def channel_mix(p, x, shift_prev):
+    xs = _shift(x, shift_prev)
+    xk = _mix(x, xs, p["mu"][0])
+    xr = _mix(x, xs, p["mu"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid((xr @ p["wr"]).astype(jnp.float32)).astype(x.dtype) \
+        * (k @ p["wv"]), x[:, -1, :]
+
+
+def channel_mix_step(p, x, shift_prev):
+    xs = shift_prev[:, None, :]
+    xk = _mix(x, xs, p["mu"][0])
+    xr = _mix(x, xs, p["mu"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid((xr @ p["wr"]).astype(jnp.float32)).astype(x.dtype) \
+        * (k @ p["wv"]), x[:, 0, :]

@@ -1,0 +1,88 @@
+"""Mamba-style selective SSM branch (used by the Hymba hybrid heads).
+
+The time-varying linear recurrence  h_t = a_t * h_{t-1} + b_t  is evaluated
+with ``jax.lax.associative_scan`` — the TPU-idiomatic replacement for the
+CUDA selective-scan kernel (DESIGN.md section 3, hardware adaptation).
+State size N is small (16), so the scan elements (B,S,D,N) stay modest and
+the XLA scan lowers to log-depth compute.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, zeros_init
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    """Selective-SSM branch operating on the full residual width."""
+    d, n = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt_rank = max(1, d // 16)
+    params = {
+        "win": dense_init(ks[0], (d, d), dtype),              # input proj
+        "wbc": dense_init(ks[1], (d, 2 * n), dtype),          # B,C proj
+        "wdt": dense_init(ks[2], (d, dt_rank), dtype),
+        "wdt2": dense_init(ks[3], (dt_rank, d), dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (d, 1))),                   # (D,N)
+        "d_skip": jnp.ones((d,), jnp.float32),
+        "wout": dense_init(ks[4], (d, d), dtype, scale=1.0 / math.sqrt(d)),
+        "dt_bias": zeros_init((d,), jnp.float32),
+    }
+    specs = {
+        "win": ("embed", "mlp_d"),
+        "wbc": ("embed", None),
+        "wdt": ("embed", None),
+        "wdt2": (None, "mlp_d"),
+        "a_log": ("mlp_d", None),
+        "d_skip": ("mlp_d",),
+        "wout": ("mlp_d", "embed"),
+        "dt_bias": ("mlp_d",),
+    }
+    return params, specs
+
+
+def _ssm_coeffs(p, x):
+    """x (B,S,D) -> a (B,S,D,N), bx (B,S,D,N), c (B,S,N), u (B,S,D)."""
+    u = x @ p["win"]
+    bc = (x @ p["wbc"]).astype(jnp.float32)
+    n = bc.shape[-1] // 2
+    b_in, c = bc[..., :n], bc[..., n:]
+    dt = (x @ p["wdt"]) @ p["wdt2"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,D)
+    a = -jnp.exp(p["a_log"])                                      # (D,N)
+    da = jnp.exp(dt[..., None] * a)                               # (B,S,D,N)
+    # Euler-discretized input term
+    bx = dt[..., None] * b_in[..., None, :] \
+        * u.astype(jnp.float32)[..., None]                        # (B,S,D,N)
+    return da, bx, c, u
+
+
+def ssm_scan(p, x):
+    """Full-sequence selective scan. x (B,S,D) -> (y (B,S,D), h_T (B,D,N))."""
+    da, bx, c, u = _ssm_coeffs(p, x)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (da, bx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c)
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(u.astype(jnp.float32))      # gated output
+    return (y @ p["wout"].astype(jnp.float32)).astype(x.dtype), h[:, -1]
+
+
+def ssm_step(p, x, h_prev):
+    """Single decode step. x (B,1,D); h_prev (B,D,N) -> (y (B,1,D), h)."""
+    da, bx, c, u = _ssm_coeffs(p, x)
+    h = da[:, 0] * h_prev + bx[:, 0]                # (B,D,N)
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0])
+    y = y + u[:, 0].astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(u[:, 0].astype(jnp.float32))
+    return (y @ p["wout"].astype(jnp.float32)).astype(x.dtype)[:, None], h

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamW
+from repro.optim.sgd import SGD, apply_updates
+from repro.optim import schedules
+
+__all__ = ["AdamW", "SGD", "apply_updates", "schedules"]

@@ -1,0 +1,43 @@
+"""AdamW in pure JAX pytrees (fp32 moments)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(z, params),
+                "nu": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        t = state["t"] + 1
+        mu = jax.tree.map(lambda m, g: self.b1 * m
+                          + (1 - self.b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v
+                          + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+        lr = self.lr * lr_scale
+
+        def upd(m, v, p):
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                step = step + lr * self.weight_decay * p.astype(jnp.float32)
+            return -step
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "t": t}

@@ -1,0 +1,41 @@
+"""SGD (+momentum, +weight decay) in pure JAX pytrees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        lr = self.lr * lr_scale
+        if self.weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g.astype(jnp.float32)
+                + self.weight_decay * p.astype(jnp.float32), grads, params)
+        if self.momentum == 0.0:
+            upd = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+            return upd, state
+        new_state = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state, grads)
+        upd = jax.tree.map(lambda m: -lr * m, new_state)
+        return upd, new_state
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

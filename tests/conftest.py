@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see ONE device — the 512-device flag is set
+# ONLY inside repro.launch.dryrun (and the dedicated dryrun test subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

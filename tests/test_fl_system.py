@@ -1,0 +1,175 @@
+"""Integration + property tests for the FL runtime (server, aggregation,
+data pipeline, checkpointing)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro.configs import FLConfig, NOMAConfig, get_config
+from repro.data import (
+    TaskConfig,
+    balanced_eval_set,
+    bayes_optimal_accuracy,
+    partition_clients,
+    topic_matrices,
+)
+from repro.fl import FLServer, aggregate_deltas, apply_aggregate
+from repro.models import zoo
+
+TINY = dataclasses.replace(get_config("smollm_135m").reduced(),
+                           d_model=32, d_ff=64, vocab_size=32, n_layers=2)
+TASK = TaskConfig(vocab_size=32, n_topics=4, seq_len=17, seed=0)
+FL = FLConfig(n_clients=8, rounds=3, local_epochs=1, local_batch=8,
+              lr=0.2, samples_per_client=(24, 48), seed=0)
+NCFG = NOMAConfig(n_subchannels=2)
+
+
+class TestData:
+    def test_partition_deterministic(self):
+        a = partition_clients(FL, TASK)
+        b = partition_clients(FL, TASK)
+        for ca, cb in zip(a, b):
+            np.testing.assert_array_equal(ca.sequences, cb.sequences)
+
+    def test_partition_sizes_and_range(self):
+        clients = partition_clients(FL, TASK)
+        assert len(clients) == FL.n_clients
+        for c in clients:
+            assert FL.samples_per_client[0] <= c.n_samples \
+                <= FL.samples_per_client[1]
+            assert c.sequences.min() >= 0
+            assert c.sequences.max() < TASK.vocab_size
+            assert c.topic_mix.shape == (TASK.n_topics,)
+            assert c.topic_mix.sum() == pytest.approx(1.0)
+
+    def test_topics_are_distinct_chains(self):
+        mats = topic_matrices(TASK)
+        assert mats.shape == (4, 32, 32)
+        np.testing.assert_allclose(mats.sum(-1), 1.0, rtol=1e-9)
+        assert np.abs(mats[0] - mats[1]).max() > 0.1
+
+    def test_bayes_ceiling_beats_chance(self):
+        assert bayes_optimal_accuracy(TASK) > 2.0 / TASK.vocab_size
+
+    def test_eval_set_balanced(self):
+        ev = balanced_eval_set(TASK, n_per_topic=8)
+        assert ev.shape == (32, 17)
+
+
+class TestAggregate:
+    @given(st.integers(1, 6), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_weighted_sum_linearity(self, c, seed):
+        """FedAvg aggregation == manual weighted sum over pytrees."""
+        key = jax.random.PRNGKey(seed)
+        deltas = [
+            {"a": jax.random.normal(jax.random.fold_in(key, i), (5, 3)),
+             "b": jax.random.normal(jax.random.fold_in(key, 100 + i), (7,))}
+            for i in range(c)]
+        w = np.random.default_rng(seed).uniform(0.1, 1.0, c)
+        agg = aggregate_deltas(deltas, w)
+        wn = w / w.sum()
+        expect_a = sum(wn[i] * deltas[i]["a"] for i in range(c))
+        np.testing.assert_allclose(np.asarray(agg["a"]),
+                                   np.asarray(expect_a), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_identity_aggregation(self):
+        """Single client with weight 1 -> exact delta."""
+        d = {"w": jnp.arange(12.0).reshape(3, 4)}
+        agg = aggregate_deltas([d], np.array([5.0]))
+        np.testing.assert_allclose(np.asarray(agg["w"]), np.asarray(d["w"]))
+
+    def test_apply_aggregate_moves_params(self):
+        p = {"w": jnp.zeros((4,), jnp.float32)}
+        d = {"w": jnp.ones((4,), jnp.float32)}
+        out = apply_aggregate(p, d, server_lr=0.5)
+        np.testing.assert_allclose(np.asarray(out["w"]), 0.5)
+
+
+class TestServer:
+    def test_three_rounds_run_and_learn_signal(self):
+        srv = FLServer(TINY, FL, NCFG, TASK, policy="age_noma", eval_every=1)
+        hist = srv.run(3)
+        assert len(hist.rounds) == 3
+        assert all(np.isfinite(hist.loss))
+        assert all(t > 0 for t in hist.round_time)
+        assert srv.t_sim == pytest.approx(sum(hist.round_time))
+        # ages: selected reset, others grew
+        assert srv.ages.max() >= 1
+
+    def test_policies_all_run(self):
+        for policy in ("age_noma", "age_noma_budget", "random", "channel",
+                       "round_robin", "oma_age"):
+            srv = FLServer(TINY, FL, NCFG, TASK, policy=policy,
+                           eval_every=10)
+            hist = srv.run(2)
+            assert len(hist.rounds) == 2, policy
+            assert hist.participation.sum() > 0
+
+    def test_same_seed_same_topology(self):
+        s1 = FLServer(TINY, FL, NCFG, TASK, policy="age_noma")
+        s2 = FLServer(TINY, FL, NCFG, TASK, policy="channel")
+        np.testing.assert_allclose(s1.distances, s2.distances)
+        np.testing.assert_allclose(s1.n_samples, s2.n_samples)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        params, _ = zoo.init_model(jax.random.PRNGKey(0), TINY)
+        path = str(tmp_path / "ck")
+        ckpt.save(path, params, step=7, extra={"note": "x"})
+        assert ckpt.latest_step(path) == 7
+        like = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, a.dtype), params)
+        restored, manifest = ckpt.restore(path, like)
+        assert manifest["step"] == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_overwrite_keeps_latest(self, tmp_path):
+        tree = {"x": jnp.ones((3,))}
+        path = str(tmp_path / "ck")
+        ckpt.save(path, tree, step=1)
+        ckpt.save(path, {"x": 2 * jnp.ones((3,))}, step=2)
+        restored, m = ckpt.restore(path, tree)
+        assert m["step"] == 2
+        np.testing.assert_allclose(np.asarray(restored["x"]), 2.0)
+
+
+class TestOptim:
+    def test_sgd_momentum(self):
+        from repro.optim import SGD, apply_updates
+        opt = SGD(lr=0.1, momentum=0.9)
+        p = {"w": jnp.ones((2,))}
+        st_ = opt.init(p)
+        g = {"w": jnp.ones((2,))}
+        upd, st_ = opt.update(g, st_, p)
+        np.testing.assert_allclose(np.asarray(upd["w"]), -0.1)
+        upd, st_ = opt.update(g, st_, p)
+        np.testing.assert_allclose(np.asarray(upd["w"]), -0.19)
+
+    def test_adamw_step_and_decay(self):
+        from repro.optim import AdamW
+        opt = AdamW(lr=1e-2, weight_decay=0.1)
+        p = {"w": jnp.ones((2,))}
+        s = opt.init(p)
+        g = {"w": jnp.full((2,), 0.5)}
+        upd, s = opt.update(g, s, p)
+        assert s["t"] == 1
+        assert np.all(np.asarray(upd["w"]) < 0)
+
+    def test_schedules(self):
+        from repro.optim import schedules
+        cos = schedules.cosine(100, warmup=10)
+        assert cos(0) == 0.0
+        assert cos(10) == pytest.approx(1.0)
+        assert cos(100) == pytest.approx(0.1, abs=1e-6)
+        inv = schedules.inverse_sqrt(10)
+        assert inv(10) == pytest.approx(1.0)
+        assert inv(40) == pytest.approx(0.5)

@@ -1,0 +1,91 @@
+"""Unit + property tests for the NOMA wireless layer (core/noma.py)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import NOMAConfig
+from repro.core import noma
+
+CFG = NOMAConfig()
+
+gains = st.floats(min_value=1e-14, max_value=1e-3, allow_nan=False)
+
+
+class TestRates:
+    def test_sic_strong_user_sees_interference(self):
+        g_i, g_j = 1e-6, 1e-8
+        p = CFG.max_power_w
+        r_i, r_j = noma.pair_rates(p, p, g_i, g_j, CFG)
+        # strong user's rate is reduced vs interference-free
+        assert r_i < noma.solo_rate(p, g_i, CFG)
+        # weak user decoded after SIC: interference-free
+        assert np.isclose(r_j, noma.solo_rate(p, g_j, CFG))
+
+    def test_rates_positive_and_finite(self):
+        rng = np.random.default_rng(0)
+        g = rng.exponential(1e-8, size=(100, 2))
+        gi, gj = np.maximum(g[:, 0], g[:, 1]), np.minimum(g[:, 0], g[:, 1])
+        p_i, p_j = noma.pair_power_allocation(gi, gj, CFG)
+        r_i, r_j = noma.pair_rates(p_i, p_j, gi, gj, CFG)
+        assert np.all(r_i > 0) and np.all(r_j > 0)
+        assert np.all(np.isfinite(r_i)) and np.all(np.isfinite(r_j))
+
+    @given(gains, gains)
+    @settings(max_examples=200, deadline=None)
+    def test_power_allocation_balances_rates(self, a, b):
+        """Max-min optimality: either rates are (nearly) equal, or the weak
+        user is clamped at P_max and remains the bottleneck."""
+        g_i, g_j = max(a, b), min(a, b)
+        p_i, p_j = noma.pair_power_allocation(g_i, g_j, CFG)
+        assert 0 <= p_j <= CFG.max_power_w + 1e-12
+        assert p_i == pytest.approx(CFG.max_power_w)
+        r_i, r_j = noma.pair_rates(p_i, p_j, g_i, g_j, CFG)
+        if p_j < CFG.max_power_w * (1 - 1e-9):
+            assert r_i == pytest.approx(r_j, rel=1e-6)
+        else:
+            assert r_j <= r_i * (1 + 1e-9)
+
+    @given(gains, gains)
+    @settings(max_examples=100, deadline=None)
+    def test_allocation_is_maxmin_optimal_vs_grid(self, a, b):
+        """Grid search over p_j cannot beat the closed form."""
+        g_i, g_j = max(a, b), min(a, b)
+        p_i, p_j = noma.pair_power_allocation(g_i, g_j, CFG)
+        best = noma.pair_min_rate(g_i, g_j, CFG)
+        grid = np.linspace(1e-6, CFG.max_power_w, 200)
+        r_i, r_j = noma.pair_rates(CFG.max_power_w, grid, g_i, g_j, CFG)
+        assert np.min([r_i, r_j], axis=0).max() <= best * (1 + 1e-3)
+
+    def test_noma_beats_oma_for_disparate_gains(self):
+        """C2 mechanism: with distinct channel gains the NOMA pair's min
+        rate exceeds the TDMA-split OMA min rate."""
+        g_i, g_j = 1e-6, 1e-9
+        p_i, p_j = noma.pair_power_allocation(g_i, g_j, CFG)
+        rn_i, rn_j = noma.pair_rates(p_i, p_j, g_i, g_j, CFG)
+        ro_i, ro_j = noma.oma_pair_rates(CFG.max_power_w, CFG.max_power_w,
+                                         g_i, g_j, CFG)
+        assert min(rn_i, rn_j) > min(ro_i, ro_j)
+
+
+class TestChannel:
+    def test_gain_scaling_with_distance(self):
+        rng = np.random.default_rng(1)
+        d = np.array([100.0, 200.0])
+        g = noma.sample_gains(rng, d, CFG)
+        assert g.shape == (2,)
+        assert np.all(g > 0)
+
+    def test_distances_within_cell(self):
+        rng = np.random.default_rng(2)
+        d = noma.sample_distances(rng, 1000, CFG)
+        assert np.all(d >= CFG.min_radius_m) and np.all(d <= CFG.cell_radius_m)
+
+    def test_pairing_strong_weak(self):
+        gains = np.array([5., 1., 4., 2., 3., 0.5])
+        idx = np.arange(6)
+        pairs = noma.strong_weak_pairing(gains, idx)
+        assert len(pairs) == 3
+        for i, j in pairs:
+            assert gains[i] >= gains[j]
+        # strongest paired with weakest
+        assert (0, 5) in pairs

@@ -1,0 +1,150 @@
+"""Tests for AoU + the joint scheduler (core/aoi.py, core/scheduler.py)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import FLConfig, NOMAConfig
+from repro.core import (
+    RoundEnv,
+    aoi,
+    exhaustive_pairing_reference,
+    schedule_age_noma,
+    schedule_channel_greedy,
+    schedule_random,
+    schedule_round_robin,
+)
+
+NCFG = NOMAConfig(n_subchannels=3)
+FLCFG = FLConfig()
+
+
+def make_env(rng, n, model_bits=4e6):
+    from repro.core import noma
+    d = noma.sample_distances(rng, n, NCFG)
+    return RoundEnv(
+        gains=noma.sample_gains(rng, d, NCFG),
+        n_samples=rng.integers(100, 1000, n).astype(float),
+        cpu_freq=rng.uniform(0.5e9, 2e9, n),
+        ages=aoi.init_ages(n),
+        model_bits=model_bits)
+
+
+class TestAoU:
+    @given(st.integers(2, 64), st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_age_invariants(self, n, seed):
+        """Ages stay >= 1; selected reset to 1; unselected increment."""
+        rng = np.random.default_rng(seed)
+        ages = aoi.init_ages(n)
+        for _ in range(10):
+            sel = rng.random(n) < 0.3
+            new = aoi.update_ages(ages, sel)
+            assert np.all(new >= 1)
+            assert np.all(new[sel] == 1)
+            assert np.all(new[~sel] == ages[~sel] + 1)
+            ages = new
+
+    def test_round_robin_coverage_bounds_age(self):
+        """Round-robin visits everyone every ceil(N/slots) rounds."""
+        rng = np.random.default_rng(3)
+        n = 12
+        ages = aoi.init_ages(n)
+        for t in range(20):
+            env = make_env(rng, n)
+            env.ages[:] = ages
+            s = schedule_round_robin(t, env, NCFG, FLCFG)
+            ages = aoi.update_ages(ages, s.selected)
+        assert aoi.max_age(ages) <= int(np.ceil(n / 6)) + 1
+
+    def test_age_policy_bounds_staleness(self):
+        """C3: under age_noma the max age is bounded by ~N/slots; a pure
+        channel policy can starve far clients."""
+        rng = np.random.default_rng(4)
+        n = 20
+        ages_age = aoi.init_ages(n)
+        ages_ch = aoi.init_ages(n)
+        for t in range(40):
+            env = make_env(rng, n)
+            env_age = RoundEnv(env.gains, env.n_samples, env.cpu_freq,
+                               ages_age, env.model_bits)
+            s = schedule_age_noma(env_age, NCFG, FLCFG)
+            ages_age = aoi.update_ages(ages_age, s.selected)
+            env_ch = RoundEnv(env.gains, env.n_samples, env.cpu_freq,
+                              ages_ch, env.model_bits)
+            s2 = schedule_channel_greedy(env_ch, NCFG, FLCFG)
+            ages_ch = aoi.update_ages(ages_ch, s2.selected)
+        assert aoi.max_age(ages_age) <= int(np.ceil(n / 6)) + 2
+        # channel-greedy fixed topology: the far clients never get picked
+        assert aoi.max_age(ages_ch) >= aoi.max_age(ages_age)
+
+
+class TestScheduler:
+    def test_selects_full_slots(self):
+        rng = np.random.default_rng(0)
+        env = make_env(rng, 20)
+        s = schedule_age_noma(env, NCFG, FLCFG)
+        assert s.selected.sum() == 6      # 3 subchannels x 2
+        assert len(s.pairs) == 3
+        assert s.t_round > 0
+        # aggregation weights: normalized over selected
+        assert s.agg_weights.sum() == pytest.approx(1.0)
+        assert np.all((s.agg_weights > 0) == s.selected)
+
+    def test_selected_rates_positive(self):
+        rng = np.random.default_rng(1)
+        env = make_env(rng, 10)
+        for s in (schedule_age_noma(env, NCFG, FLCFG),
+                  schedule_channel_greedy(env, NCFG, FLCFG),
+                  schedule_random(rng, env, NCFG, FLCFG)):
+            assert np.all(s.rates[s.selected] > 0)
+            assert np.all(s.rates[~s.selected] == 0)
+
+    def test_age_priority_selection(self):
+        """A very old client must be admitted over equal-weight young ones."""
+        rng = np.random.default_rng(2)
+        env = make_env(rng, 20)
+        env.n_samples[:] = 500.0
+        env.ages[:] = 1
+        env.ages[7] = 100
+        s = schedule_age_noma(env, NCFG, FLCFG)
+        assert s.selected[7]
+
+    def test_budget_eviction_reduces_round_time(self):
+        rng = np.random.default_rng(5)
+        env = make_env(rng, 20, model_bits=2e7)
+        s_free = schedule_age_noma(env, NCFG, FLCFG)
+        budget = s_free.t_round * 0.5
+        flcfg = FLConfig(t_budget_s=budget)
+        s_b = schedule_age_noma(env, NCFG, flcfg)
+        assert s_b.t_round <= s_free.t_round
+        assert s_b.selected.sum() >= 1
+
+    def test_oma_slower_than_noma(self):
+        """C2: same selection, OMA round time >= NOMA round time."""
+        rng = np.random.default_rng(6)
+        worse = 0
+        for seed in range(10):
+            env = make_env(np.random.default_rng(seed), 16)
+            t_noma = schedule_age_noma(env, NCFG, FLCFG).t_round
+            t_oma = schedule_age_noma(env, NCFG, FLCFG, oma=True).t_round
+            worse += (t_oma >= t_noma)
+        assert worse >= 9   # NOMA wins (ties possible when compute-bound)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_pairing_near_optimal(self, seed):
+        """C4: heuristic pairing + closed-form power within 25% of the
+        exhaustive-optimal pairing for 6-client instances."""
+        rng = np.random.default_rng(seed)
+        env = make_env(rng, 6)
+        s = schedule_age_noma(env, NCFG, FLCFG)
+        opt = exhaustive_pairing_reference(list(range(6)), env, NCFG, FLCFG)
+        assert s.t_round <= opt * 1.25 + 1e-9
+
+    def test_odd_candidates_get_solo_subchannel(self):
+        rng = np.random.default_rng(7)
+        env = make_env(rng, 5)      # 5 clients < 6 slots -> one solo
+        s = schedule_age_noma(env, NCFG, FLCFG)
+        assert s.selected.sum() == 5
+        solos = [p for p in s.pairs if p[1] == -1]
+        assert len(solos) == 1
