@@ -8,6 +8,7 @@ Claim mapping (DESIGN.md section 1):
     C2 noma_vs_oma         round-time NOMA vs OMA
     C3 fairness_age        staleness + participation fairness
     C4 pairing_optimality  heuristic vs exhaustive pairing
+    C5 predictor_gain      ANN update predictor vs stale-reuse vs none
        kernels             Pallas-kernel micro-benches
        roofline            dry-run derived roofline table
 """
@@ -24,6 +25,7 @@ from benchmarks import (
     kernels_bench,
     noma_vs_oma,
     pairing_optimality,
+    predictor_gain,
     roofline_table,
 )
 
@@ -36,6 +38,8 @@ BENCHES = {
         trials=30 if quick else 200),
     "kernels": lambda quick: kernels_bench.run(),
     "fl_convergence": lambda quick: fl_convergence.run(
+        rounds=10 if quick else 40, quick=quick),
+    "predictor_gain": lambda quick: predictor_gain.run(
         rounds=10 if quick else 40, quick=quick),
     "roofline": lambda quick: roofline_table.run(),
 }

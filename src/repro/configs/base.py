@@ -231,6 +231,17 @@ class FLConfig:
     cpu_cycles_per_sample: float = 2e6
     cpu_freq_range_ghz: Tuple[float, float] = (0.5, 2.0)
     model_bits: float = 0.0          # 0 = derived from model param count * 32
+    # server-side update predictor for unselected clients (paper Sec. V ANN;
+    # see repro.fl.predictor for the blend formula)
+    predictor: str = "none"          # none | stale | ann
+    pred_embed_dim: int = 32         # count-sketch dim fed to the ANN
+    pred_hidden_dim: int = 64        # MLP hidden width
+    pred_lr: float = 1e-2            # online Adam lr
+    pred_steps: int = 8              # optimizer steps per round
+    pred_discount: float = 0.7       # rho: age discount of predicted updates
+    pred_blend: float = 0.5          # beta: trust of predicted vs received
+    pred_max_age: int = 0            # only predict clients with A_n <= this
+                                     # (0 = no staleness cap)
     seed: int = 0
 
 

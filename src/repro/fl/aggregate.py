@@ -25,6 +25,23 @@ def aggregate_deltas(deltas: Sequence, weights: np.ndarray, *,
     return jax.tree.map(lambda s: kops.weighted_sum(s, w, impl=impl), stacked)
 
 
+def blend_deltas(real_deltas: Sequence, real_weights: np.ndarray,
+                 pred_deltas: Sequence, pred_weights: np.ndarray, *,
+                 impl: str = "xla"):
+    """Aggregate received and server-predicted deltas in one weighted sum.
+
+    ``real_weights`` are the FedAvg data weights of the arrivals;
+    ``pred_weights`` must already carry the age-discounted trust
+    ``n_c * beta * rho^(A_c - 1)`` (see repro.fl.predictor). Normalization
+    happens jointly, so predictions dilute — never displace — real updates.
+    With no predictions this reduces exactly to ``aggregate_deltas``.
+    """
+    deltas = list(real_deltas) + list(pred_deltas)
+    weights = np.concatenate([np.asarray(real_weights, np.float64),
+                              np.asarray(pred_weights, np.float64)])
+    return aggregate_deltas(deltas, weights, impl=impl)
+
+
 def apply_aggregate(params, agg_delta, server_lr: float = 1.0):
     return jax.tree.map(
         lambda p, d: (p.astype(jnp.float32)

@@ -13,21 +13,39 @@ POLICIES = ("age_noma", "age_noma_budget", "random", "channel",
 
 def run_experiment(model_cfg: ModelConfig, fl: FLConfig, nomacfg: NOMAConfig,
                    task: TaskConfig, policy: str, *, rounds=None,
-                   verbose=False, seed=None, agg_impl="xla") -> History:
+                   verbose=False, seed=None, agg_impl="xla",
+                   predictor=None) -> History:
     server = FLServer(model_cfg, fl, nomacfg, task, policy=policy,
-                      seed=seed, agg_impl=agg_impl)
+                      seed=seed, agg_impl=agg_impl, predictor=predictor)
     return server.run(rounds, verbose=verbose)
 
 
 def compare_policies(model_cfg: ModelConfig, fl: FLConfig,
                      nomacfg: NOMAConfig, task: TaskConfig, *,
                      policies=POLICIES, rounds=None, verbose=False,
-                     seed=None) -> dict[str, History]:
+                     seed=None, predictor=None) -> dict[str, History]:
     """Same seed => identical client data/topology across policies; only the
     selection/RA differs (paired comparison, as the paper's figures do)."""
     return {p: run_experiment(model_cfg, fl, nomacfg, task, p, rounds=rounds,
-                              verbose=verbose, seed=seed)
+                              verbose=verbose, seed=seed,
+                              predictor=predictor)
             for p in policies}
+
+
+def compare_predictors(model_cfg: ModelConfig, fl: FLConfig,
+                       nomacfg: NOMAConfig, task: TaskConfig, *,
+                       policy: str = "age_noma", modes=("none", "stale",
+                                                        "ann"),
+                       rounds=None, verbose=False, seed=None
+                       ) -> dict[str, History]:
+    """A/B the update predictor under ONE selection policy. Same seed =>
+    identical topology, gains, selections, and local batches across modes
+    (the predictor never touches the server rng), so differences are purely
+    the blended predicted updates."""
+    return {m: run_experiment(model_cfg, fl, nomacfg, task, policy,
+                              rounds=rounds, verbose=verbose, seed=seed,
+                              predictor=m)
+            for m in modes}
 
 
 def time_to_accuracy(hist: History, target: float) -> Optional[float]:

@@ -3,10 +3,15 @@ the training substrate (models/, optim/, data/).
 
 Per round:
   1. sample block-fading gains; build RoundEnv (incl. current AoU ages);
-  2. run the selection policy -> Schedule (mask, pairs, powers, rates, T);
+  2. run the selection policy -> Schedule (mask, pairs, powers, rates, T)
+     via the shared ``select()`` path (every policy, with or without the
+     update predictor);
   3. run local SGD for selected clients; collect deltas;
-  4. FedAvg-aggregate (kernels.fedagg path) and apply;
-  5. advance ages and the simulated wall clock by T_round.
+  4. when ``predictor != "none"``: train the server-side ANN on the
+     arrivals, predict deltas for unselected clients, and blend them in
+     with age-discounted weights (repro.fl.predictor);
+  5. FedAvg-aggregate (kernels.fedagg path) and apply;
+  6. advance ages and the simulated wall clock by T_round.
 """
 from __future__ import annotations
 
@@ -34,8 +39,10 @@ from repro.data import (
     client_batches,
     partition_clients,
 )
-from repro.fl.aggregate import aggregate_deltas, apply_aggregate
+from repro.fl.aggregate import aggregate_deltas, apply_aggregate, \
+    blend_deltas
 from repro.fl.client import LocalTrainer
+from repro.fl.predictor import UpdatePredictor
 from repro.models import zoo
 
 
@@ -49,18 +56,33 @@ class History:
     max_age: list = dataclasses.field(default_factory=list)
     mean_age: list = dataclasses.field(default_factory=list)
     n_selected: list = dataclasses.field(default_factory=list)
+    # update-predictor telemetry (all-nan / zeros when predictor == "none")
+    n_predicted: list = dataclasses.field(default_factory=list)
+    pred_loss: list = dataclasses.field(default_factory=list)
+    pred_error: list = dataclasses.field(default_factory=list)
     participation: Optional[np.ndarray] = None
 
     def as_dict(self):
-        return {k: (v.tolist() if isinstance(v, np.ndarray) else v)
-                for k, v in dataclasses.asdict(self).items()}
+        """JSON-safe dict: ndarrays become lists, non-finite floats become
+        None (predictor telemetry is NaN on rounds without predictions, and
+        bare NaN tokens break strict JSON parsers)."""
+        def clean(v):
+            if isinstance(v, np.ndarray):
+                return v.tolist()
+            if isinstance(v, list):
+                return [None if isinstance(x, float) and not np.isfinite(x)
+                        else x for x in v]
+            return v
+
+        return {k: clean(v) for k, v in dataclasses.asdict(self).items()}
 
 
 class FLServer:
     def __init__(self, model_cfg: ModelConfig, fl: FLConfig,
                  nomacfg: NOMAConfig, task: TaskConfig, *,
                  policy: str = "age_noma", agg_impl: str = "xla",
-                 eval_every: int = 5, seed: Optional[int] = None):
+                 eval_every: int = 5, seed: Optional[int] = None,
+                 predictor: Optional[str] = None):
         self.cfg = model_cfg
         self.fl = fl
         self.noma = nomacfg
@@ -68,6 +90,7 @@ class FLServer:
         self.policy = policy
         self.agg_impl = agg_impl
         self.eval_every = eval_every
+        self.predictor_mode = fl.predictor if predictor is None else predictor
         seed = fl.seed if seed is None else seed
         self.rng = np.random.default_rng(seed + 10_000)
 
@@ -86,8 +109,18 @@ class FLServer:
         n_params = sum(p.size for p in jax.tree.leaves(self.params))
         self.model_bits = fl.model_bits or float(n_params) * 32.0
 
+        # server-side update predictor (own seed: must not perturb the
+        # topology/selection rng stream, so none/stale/ann stay paired)
+        self.predictor = None
+        if self.predictor_mode != "none":
+            self.predictor = UpdatePredictor(
+                self.params, fl, fl.n_clients, mode=self.predictor_mode,
+                seed=seed)
+
         self.ages = aoi.init_ages(fl.n_clients)
         self._auto_budget = None
+        self.pred_stats = {"n_predicted": 0, "pred_loss": float("nan"),
+                           "pred_error": float("nan")}
         self.t_sim = 0.0
         self.round_idx = 0
         self.eval_tokens = jnp.asarray(balanced_eval_set(task))
@@ -113,7 +146,9 @@ class FLServer:
         return float(acc), float(loss)
 
     # -- scheduling --------------------------------------------------------
-    def _schedule(self, env: RoundEnv) -> Schedule:
+    def select(self, env: RoundEnv) -> Schedule:
+        """Shared selection path: every policy resolves here, so each can
+        run with or without the update predictor."""
         p = self.policy
         if p == "age_noma":
             return schedule_age_noma(env, self.noma, self.fl)
@@ -145,7 +180,7 @@ class FLServer:
         env = RoundEnv(gains=gains, n_samples=self.n_samples,
                        cpu_freq=self.cpu_freq, ages=self.ages,
                        model_bits=self.model_bits)
-        sched = self._schedule(env)
+        sched = self.select(env)
 
         sel = np.flatnonzero(sched.selected)
         deltas, weights = [], []
@@ -156,15 +191,43 @@ class FLServer:
             delta, _ = self.trainer.local_update(self.params, batches)
             deltas.append(delta)
             weights.append(self.n_samples[ci])
-        if deltas:
+        self.pred_stats = {"n_predicted": 0, "pred_loss": float("nan"),
+                           "pred_error": float("nan")}
+        if deltas and self.predictor is None:
             agg = aggregate_deltas(deltas, np.asarray(weights),
                                    impl=self.agg_impl)
             self.params = apply_aggregate(self.params, agg)
+        elif deltas:
+            self._aggregate_with_predictions(sel, deltas, weights)
 
         self.ages = aoi.update_ages(self.ages, sched.selected)
         self.t_sim += sched.t_round
         self.round_idx += 1
         return sched
+
+    def _aggregate_with_predictions(self, sel, deltas, weights):
+        """Predictor path: train on arrivals, predict the unselected, blend
+        with age-discounted weights, apply."""
+        pred = self.predictor
+        data_w = self.n_samples / self.n_samples.sum()
+        flat = [pred.flatten(d) for d in deltas]
+        stats = pred.observe(sel, flat, self.ages, data_w)
+
+        w_real = np.asarray(weights, np.float64)
+        wn = w_real / w_real.sum()
+        mean_flat = sum(wi * f for wi, f in zip(wn, flat))
+        selected = np.zeros(self.fl.n_clients, bool)
+        selected[sel] = True
+        targets = pred.predictable(selected, self.ages)
+        pred_flats = pred.predict(targets, self.ages, data_w, mean_flat)
+        pred_trees = [pred.unflatten(f) for f in pred_flats]
+        w_pred = (self.n_samples[targets] * self.fl.pred_blend
+                  * aoi.age_discount(self.ages[targets],
+                                     self.fl.pred_discount))
+        agg = blend_deltas(deltas, w_real, pred_trees, w_pred,
+                           impl=self.agg_impl)
+        self.params = apply_aggregate(self.params, agg)
+        self.pred_stats = {"n_predicted": len(targets), **stats}
 
     # -- full experiment ---------------------------------------------------
     def run(self, rounds: Optional[int] = None, *, verbose: bool = False
@@ -185,6 +248,9 @@ class FLServer:
             hist.max_age.append(aoi.max_age(self.ages))
             hist.mean_age.append(aoi.mean_age(self.ages))
             hist.n_selected.append(int(sched.selected.sum()))
+            hist.n_predicted.append(self.pred_stats["n_predicted"])
+            hist.pred_loss.append(self.pred_stats["pred_loss"])
+            hist.pred_error.append(self.pred_stats["pred_error"])
             if verbose and r % self.eval_every == 0:
                 print(f"[{self.policy}] round {r:3d} t={self.t_sim:9.1f}s "
                       f"acc={acc:.4f} loss={loss:.4f} "

@@ -210,7 +210,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = RL.cost_analysis_dict(compiled)
     hlo = compiled.as_text()
 
     rf = RL.build_roofline(

@@ -10,12 +10,20 @@ from __future__ import annotations
 import jax
 
 
+def axis_type_kwargs(n_axes: int) -> dict:
+    """jax.sharding.AxisType landed after 0.4.x; older jax defaults every
+    axis to Auto, so omitting the kwarg there is equivalent. Shared by the
+    mesh builders here and the test subprocess scripts."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
@@ -23,8 +31,7 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = max(1, n // model)
     return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        (data, model), ("data", "model"), **axis_type_kwargs(2))
 
 
 def mesh_info(mesh) -> "MeshInfo":

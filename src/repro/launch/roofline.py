@@ -73,6 +73,13 @@ def _wire_bytes(kind: str, nbytes: int, g: int) -> float:
     return float(nbytes)                   # collective-permute
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns ``[dict]`` on jax<=0.4.x and a
+    plain dict on newer jax; normalize to the dict."""
+    cost = compiled.cost_analysis()
+    return cost[0] if isinstance(cost, list) else cost
+
+
 @dataclasses.dataclass
 class CollectiveStats:
     wire_bytes: float

@@ -7,3 +7,17 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# hypothesis is an OPTIONAL dependency (declared in requirements.txt, so CI
+# has it). The property-test modules import given/settings/st from the _hyp
+# shim, which falls back to a deterministic seeded generator when hypothesis
+# is absent — the suite must collect and run green on a clean environment.
+import _hyp  # noqa: E402
+
+
+def pytest_report_header(config):
+    if _hyp.HAVE_HYPOTHESIS:
+        return "property tests: hypothesis"
+    return ("property tests: hypothesis NOT installed — running the "
+            "deterministic fallback in tests/_hyp.py (pip install "
+            "hypothesis for full shrinking/edge-case generation)")

@@ -1,0 +1,118 @@
+"""Property/invariant tests the age-NOMA scheme lives or dies on:
+max-min power balance (noma), age-reset bookkeeping (aoi), and the budget
+eviction loop (scheduler). Companion to test_noma/test_scheduler — these
+pin the exact acceptance invariants with both hypothesis strategies (via
+the _hyp shim) and dense seeded sweeps."""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.configs import FLConfig, NOMAConfig
+from repro.core import RoundEnv, aoi, noma, schedule_age_noma
+
+CFG = NOMAConfig()
+NCFG = NOMAConfig(n_subchannels=3)
+
+gains = st.floats(min_value=1e-14, max_value=1e-3)
+
+
+def make_env(rng, n, model_bits=4e6, ages=None):
+    d = noma.sample_distances(rng, n, NCFG)
+    return RoundEnv(
+        gains=noma.sample_gains(rng, d, NCFG),
+        n_samples=rng.integers(100, 1000, n).astype(float),
+        cpu_freq=rng.uniform(0.5e9, 2e9, n),
+        ages=aoi.init_ages(n) if ages is None else ages,
+        model_bits=model_bits)
+
+
+class TestPowerAllocation:
+    @given(gains, gains)
+    @settings(max_examples=200, deadline=None)
+    def test_balance_or_clamp(self, a, b):
+        """Unclamped weak power => R_i == R_j (max-min balance); clamped at
+        P_max => the weak user stays the bottleneck (R_j <= R_i)."""
+        g_i, g_j = max(a, b), min(a, b)
+        p_i, p_j = noma.pair_power_allocation(g_i, g_j, CFG)
+        assert 0.0 < p_i <= CFG.max_power_w
+        assert 0.0 < p_j <= CFG.max_power_w + 1e-15
+        r_i, r_j = noma.pair_rates(p_i, p_j, g_i, g_j, CFG)
+        if p_j < CFG.max_power_w * (1.0 - 1e-9):
+            assert r_i == pytest.approx(r_j, rel=1e-6)
+        else:
+            assert r_j <= r_i * (1.0 + 1e-9)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_vectorized_batch(self, seed):
+        """Same invariants hold element-wise on pair arrays, including under
+        config variation (bandwidth/power)."""
+        rng = np.random.default_rng(seed)
+        cfg = NOMAConfig(bandwidth_hz=float(rng.uniform(1e5, 1e7)),
+                         max_power_w=float(rng.uniform(0.01, 1.0)))
+        g = rng.exponential(1e-8, size=(64, 2))
+        gi, gj = np.maximum(g[:, 0], g[:, 1]), np.minimum(g[:, 0], g[:, 1])
+        p_i, p_j = noma.pair_power_allocation(gi, gj, cfg)
+        assert np.all(p_i > 0) and np.all(p_j > 0)
+        assert np.all(p_j <= cfg.max_power_w * (1 + 1e-12))
+        r_i, r_j = noma.pair_rates(p_i, p_j, gi, gj, cfg)
+        clamped = p_j >= cfg.max_power_w * (1 - 1e-9)
+        np.testing.assert_allclose(r_i[~clamped], r_j[~clamped], rtol=1e-6)
+        assert np.all(r_j[clamped] <= r_i[clamped] * (1 + 1e-9))
+
+
+class TestAgeBookkeeping:
+    @given(st.integers(2, 64), st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_exact_reset_and_increment(self, n, seed):
+        rng = np.random.default_rng(seed)
+        ages = aoi.init_ages(n)
+        for _ in range(8):
+            sel = rng.random(n) < rng.uniform(0.0, 1.0)
+            new = aoi.update_ages(ages, sel)
+            assert np.all(new[sel] == 1)
+            assert np.all(new[~sel] == ages[~sel] + 1)
+            assert np.all(new >= 1)
+            ages = new
+
+    def test_discount_and_features(self):
+        ages = np.array([1, 2, 5])
+        np.testing.assert_allclose(aoi.age_discount(ages, 0.5),
+                                   [1.0, 0.5, 0.0625])
+        w = np.array([0.2, 0.3, 0.5])
+        f = aoi.staleness_features(ages, w)
+        assert f.shape == (3, 2)
+        np.testing.assert_allclose(f[:, 0], np.log1p(ages - 1))
+        np.testing.assert_allclose(f[:, 1], w * 3)
+
+
+class TestBudgetEviction:
+    @given(st.integers(0, 10_000), st.floats(min_value=1e-3, max_value=1e3))
+    @settings(max_examples=60, deadline=None)
+    def test_terminates_and_meets_budget_or_single(self, seed, budget):
+        """For ANY budget the eviction loop terminates and either meets
+        t_budget_s or has evicted down to a single client."""
+        rng = np.random.default_rng(seed)
+        env = make_env(rng, 12, model_bits=2e7)
+        flcfg = FLConfig(t_budget_s=float(budget))
+        s = schedule_age_noma(env, NCFG, flcfg)
+        n_sel = int(s.selected.sum())
+        assert n_sel >= 1
+        assert s.t_round <= budget or n_sel == 1
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=60, deadline=None)
+    def test_evicted_consistent_with_mask(self, seed):
+        """info["evicted"] never intersects the final selection, and the
+        slots bound holds: selected + distinct evicted <= N."""
+        rng = np.random.default_rng(seed)
+        env = make_env(rng, 10, model_bits=2e7)
+        free = schedule_age_noma(env, NCFG, FLConfig())
+        flcfg = FLConfig(t_budget_s=float(free.t_round) * 0.3)
+        s = schedule_age_noma(env, NCFG, flcfg)
+        evicted = s.info["evicted"]
+        assert len(set(evicted)) == len(evicted)
+        for c in evicted:
+            assert not s.selected[c]
+        assert int(s.selected.sum()) + len(evicted) <= len(env.gains)
+        assert s.t_round <= free.t_round + 1e-9

@@ -1,7 +1,7 @@
 """Unit + property tests for the NOMA wireless layer (core/noma.py)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import NOMAConfig
 from repro.core import noma

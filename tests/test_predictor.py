@@ -1,0 +1,176 @@
+"""Unit tests for the server-side update predictor (repro.fl.predictor)
+and its integration into FLServer aggregation."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, NOMAConfig, get_config
+from repro.data import TaskConfig
+from repro.fl import FLServer, History, UpdatePredictor, blend_deltas
+from repro.fl.predictor import init_mlp, make_sketch, mlp_coeffs
+
+TINY = dataclasses.replace(get_config("smollm_135m").reduced(),
+                           d_model=32, d_ff=64, vocab_size=32, n_layers=2)
+TASK = TaskConfig(vocab_size=32, n_topics=4, seq_len=17, seed=0)
+FL = FLConfig(n_clients=8, rounds=3, local_epochs=1, local_batch=8,
+              lr=0.2, samples_per_client=(24, 48), seed=0)
+NCFG = NOMAConfig(n_subchannels=2)
+
+TEMPLATE = {"w": jnp.zeros((5, 3), jnp.float32),
+            "b": jnp.zeros((7,), jnp.float32)}
+
+
+def make_predictor(mode="ann", n_clients=6, **fl_kw):
+    fl = FLConfig(n_clients=n_clients, predictor=mode, pred_embed_dim=8,
+                  pred_hidden_dim=16, **fl_kw)
+    return UpdatePredictor(TEMPLATE, fl, n_clients, seed=0)
+
+
+def rand_flat(rng, n_params=22):
+    return jnp.asarray(rng.normal(size=n_params).astype(np.float32))
+
+
+class TestPredictorCore:
+    def test_predicted_shapes_and_dtypes(self):
+        pred = make_predictor("ann")
+        rng = np.random.default_rng(0)
+        ages = np.ones(6, dtype=np.int64)
+        w = np.full(6, 1.0 / 6)
+        flats = [rand_flat(rng) for _ in range(3)]
+        pred.observe([0, 1, 2], flats, ages, w)
+        out = pred.predict([0, 2], ages, w, rand_flat(rng))
+        assert len(out) == 2
+        for f in out:
+            assert f.shape == (pred.n_params,)
+            assert f.dtype == jnp.float32
+            tree = pred.unflatten(f)
+            assert jax.tree.structure(tree) == jax.tree.structure(TEMPLATE)
+            for got, want in zip(jax.tree.leaves(tree),
+                                 jax.tree.leaves(TEMPLATE)):
+                assert got.shape == want.shape and got.dtype == want.dtype
+
+    def test_stale_mode_reuses_last_delta(self):
+        pred = make_predictor("stale")
+        rng = np.random.default_rng(1)
+        ages = np.ones(6, dtype=np.int64)
+        w = np.full(6, 1.0 / 6)
+        f0 = rand_flat(rng)
+        pred.observe([4], [f0], ages, w)
+        (out,) = pred.predict([4], ages, w, rand_flat(rng))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(f0))
+
+    def test_predictable_respects_history_and_age_cap(self):
+        pred = make_predictor("ann", pred_max_age=3)
+        rng = np.random.default_rng(2)
+        ages = np.array([1, 2, 5, 1, 1, 1])
+        w = np.full(6, 1.0 / 6)
+        pred.observe([1, 2], [rand_flat(rng), rand_flat(rng)], ages, w)
+        selected = np.array([False, False, False, True, False, False])
+        # 1: known + fresh -> yes; 2: known but age 5 > cap -> no;
+        # 0/4/5: no history; 3: selected
+        np.testing.assert_array_equal(pred.predictable(selected, ages), [1])
+
+    def test_online_training_loss_decreases(self):
+        """On a FIXED synthetic stream with a learnable rule (true delta =
+        0.9*last + 0.1*mean) the online loss must drop."""
+        pred = make_predictor("ann")
+        rng = np.random.default_rng(3)
+        m, e = 16, pred.embed_dim
+        sl = jnp.asarray(rng.normal(size=(m, e)).astype(np.float32))
+        sm = jnp.asarray(rng.normal(size=(m, e)).astype(np.float32))
+        st_ = 0.9 * sl + 0.1 * sm
+        x = jnp.concatenate(
+            [sl / jnp.linalg.norm(sl, axis=1, keepdims=True),
+             sm / jnp.linalg.norm(sm, axis=1, keepdims=True),
+             jnp.asarray(rng.normal(size=(m, 4)).astype(np.float32))],
+            axis=1)
+        first = pred.train_on(x, sl, sm, st_, steps=1)
+        for _ in range(60):
+            last = pred.train_on(x, sl, sm, st_, steps=1)
+        assert last < 0.5 * first
+
+    def test_sketch_is_linear_and_norm_preserving(self):
+        sk = make_sketch(4096, 64, seed=0)
+        rng = np.random.default_rng(4)
+        a = jnp.asarray(rng.normal(size=4096).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=4096).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(sk(2.0 * a + b)),
+                                   np.asarray(2.0 * sk(a) + sk(b)),
+                                   rtol=1e-4, atol=1e-4)
+        # E||Sx||^2 = ||x||^2 (count-sketch): within 30% at this dim
+        ratio = float(jnp.linalg.norm(sk(a)) / jnp.linalg.norm(a))
+        assert 0.7 < ratio < 1.3
+
+    def test_mlp_prior_is_half_half(self):
+        net = init_mlp(jax.random.PRNGKey(0), d_in=20, d_hidden=16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (5, 20))
+        a, b = mlp_coeffs(net, x)
+        np.testing.assert_allclose(np.asarray(a), 0.5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(b), 0.5, atol=1e-6)
+
+
+class TestServerIntegration:
+    def test_none_is_bit_identical_to_default_path(self):
+        """predictor="none" must take the exact pre-predictor code path."""
+        s1 = FLServer(TINY, FL, NCFG, TASK, policy="age_noma")
+        s2 = FLServer(TINY, FL, NCFG, TASK, policy="age_noma",
+                      predictor="none")
+        assert s2.predictor is None
+        s1.run(3)
+        s2.run(3)
+        for a, b in zip(jax.tree.leaves(s1.params),
+                        jax.tree.leaves(s2.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_modes_share_selection_trajectory(self):
+        """The predictor must not perturb the server rng: selections (and
+        hence ages/round times) stay paired across none/ann."""
+        s_none = FLServer(TINY, FL, NCFG, TASK, policy="age_noma")
+        s_ann = FLServer(TINY, FL, NCFG, TASK, policy="age_noma",
+                         predictor="ann")
+        for _ in range(4):
+            a = s_none.run_round()
+            b = s_ann.run_round()
+            np.testing.assert_array_equal(a.selected, b.selected)
+            assert a.t_round == pytest.approx(b.t_round)
+
+    def test_ann_records_telemetry(self):
+        srv = FLServer(TINY, FL, NCFG, TASK, policy="age_noma",
+                       predictor="ann", eval_every=10)
+        hist = srv.run(4)
+        assert len(hist.n_predicted) == 4
+        assert hist.n_predicted[0] == 0          # no history in round 0
+        assert max(hist.n_predicted) > 0
+        assert any(np.isfinite(l) for l in hist.pred_loss)
+        assert any(np.isfinite(e) for e in hist.pred_error)
+
+    def test_blend_reduces_to_fedavg_without_predictions(self):
+        from repro.fl import aggregate_deltas
+        rng = np.random.default_rng(5)
+        deltas = [{"w": jnp.asarray(rng.normal(size=(3, 2)), jnp.float32)}
+                  for _ in range(3)]
+        w = np.array([1.0, 2.0, 3.0])
+        a = aggregate_deltas(deltas, w)
+        b = blend_deltas(deltas, w, [], np.zeros((0,)))
+        np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+
+    def test_history_roundtrips_through_as_dict(self):
+        srv = FLServer(TINY, FL, NCFG, TASK, policy="age_noma",
+                       predictor="ann", eval_every=10)
+        hist = srv.run(3)
+        d = hist.as_dict()
+        for k in ("rounds", "accuracy", "n_predicted", "pred_loss",
+                  "pred_error"):
+            assert len(d[k]) == 3, k
+        assert isinstance(d["participation"], list)
+        # json-serializable end to end (nan allowed by json module)
+        back = json.loads(json.dumps(d))
+        assert back["n_predicted"] == d["n_predicted"]
+        h2 = History(**{k: d[k] for k in d if k != "participation"},
+                     participation=np.asarray(d["participation"]))
+        assert h2.accuracy == hist.accuracy
+        assert h2.n_predicted == hist.n_predicted

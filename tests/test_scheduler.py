@@ -1,7 +1,7 @@
 """Tests for AoU + the joint scheduler (core/aoi.py, core/scheduler.py)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import FLConfig, NOMAConfig
 from repro.core import (

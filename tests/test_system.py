@@ -71,8 +71,8 @@ from repro.launch.dryrun import abstract_params_and_specs
 from repro.launch import roofline as RL
 from repro.launch.mesh import mesh_info
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import axis_type_kwargs
+mesh = jax.make_mesh((2, 4), ("data", "model"), **axis_type_kwargs(2))
 minfo = mesh_info(mesh)
 cfg = dataclasses.replace(get_config("%s").reduced(), vocab_size=64)
 shape = ShapeConfig("t", 64, 8, "train")
@@ -92,7 +92,7 @@ with mesh:
                       out_shardings=(pshard, ms)).lower(params, bshapes)
 compiled = lowered.compile()
 mem = compiled.memory_analysis()
-cost = compiled.cost_analysis()
+cost = RL.cost_analysis_dict(compiled)
 stats = RL.collective_stats(compiled.as_text())
 assert mem.temp_size_in_bytes > 0
 assert cost["flops"] > 0
@@ -124,8 +124,8 @@ import jax, jax.numpy as jnp, dataclasses
 from repro.configs import get_config
 from repro.models import layers as L
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import axis_type_kwargs
+mesh = jax.make_mesh((2, 4), ("data", "model"), **axis_type_kwargs(2))
 cfg = dataclasses.replace(get_config("llama4_maverick_400b_a17b").reduced(),
                           n_heads=5, n_kv_heads=1, head_dim=16)
 B, S = 4, 64
