@@ -1,0 +1,228 @@
+"""Engine throughput: Monte-Carlo channel drops/sec, numpy scheduler vs the
+batched JAX engine (core/engine.py) vs the jax+pallas scoring path.
+
+One "drop" = one full joint round: age-priority selection, strong/weak SIC
+pairing, closed-form power allocation, rates, round time. The numpy column
+loops ``schedule_age_noma`` per drop (the pre-engine status quo); the jax
+columns push all drops through one vmapped ``schedule_batch`` call
+(compile excluded — it is amortized over every later sweep).
+
+On CPU the pallas column runs the kernel in interpret mode (correctness
+path, slow by construction); on TPU it is the compiled fused kernel.
+
+Writes ``experiments/bench/BENCH_engine_throughput.json`` so CI tracks the
+perf trajectory. ``--smoke`` shrinks sizes for the CI job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _make_batch(rng, drops, n, ncfg):
+    from repro.core import noma
+
+    dist = np.stack([noma.sample_distances(rng, n, ncfg)
+                     for _ in range(drops)])
+    gains = np.stack([noma.sample_gains(rng, dist[b], ncfg)
+                      for b in range(drops)])
+    n_samples = rng.uniform(100, 1000, (drops, n))
+    cpu_freq = rng.uniform(0.5e9, 2e9, (drops, n))
+    ages = rng.integers(1, 30, (drops, n)).astype(float)
+    return gains, n_samples, cpu_freq, ages
+
+
+def bench_case(n, k, drops, *, model_bits=1e6, seed=0, reps=5,
+               numpy_cap=128, pallas_cap=8, skip_pallas=False):
+    import jax
+
+    from repro.configs import FLConfig, NOMAConfig
+    from repro.core.engine import WirelessEngine
+    from repro.core.scheduler import RoundEnv, schedule_age_noma
+
+    ncfg = NOMAConfig(n_subchannels=k)
+    flcfg = FLConfig()
+    rng = np.random.default_rng(seed)
+    gains, n_samples, cpu_freq, ages = _make_batch(rng, drops, n, ncfg)
+
+    row = {"n": n, "k": k, "drops": drops}
+
+    def best_of(fn, work):
+        """Best throughput over ``reps`` timed repetitions (min-time is the
+        standard noise-robust estimator on shared machines)."""
+        best = 0.0
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = max(best, work / (time.perf_counter() - t0))
+        return best
+
+    # numpy reference: serial Python loop (timed on a capped prefix)
+    nd = min(drops, numpy_cap)
+
+    def run_numpy():
+        for b in range(nd):
+            env = RoundEnv(gains[b], n_samples[b], cpu_freq[b], ages[b],
+                           model_bits)
+            schedule_age_noma(env, ncfg, flcfg)
+
+    run_numpy()   # warm caches
+    row["drops_per_s_numpy"] = best_of(run_numpy, nd)
+
+    # jax batched engine: device-resident sharded chunks (a real MC sweep
+    # samples gains on device — the host round-trip is not part of the
+    # engine's steady state), walked in cache-friendly pieces
+    import jax.numpy as jnp
+
+    eng = WirelessEngine(ncfg, flcfg)
+    ndev = len(jax.devices())
+    chunk = min(drops, 256 * ndev)
+    while drops % chunk:
+        chunk -= 1
+
+    def place(x):
+        x = jnp.asarray(x, jnp.float32)
+        if ndev > 1 and x.shape[0] % ndev == 0:
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+            sh = NamedSharding(Mesh(np.array(jax.devices()), ("b",)),
+                               PartitionSpec("b"))
+            x = jax.device_put(x, sh)
+        return x
+
+    chunks = [tuple(place(a[i:i + chunk])
+                    for a in (gains, n_samples, cpu_freq, ages))
+              + (model_bits,)
+              for i in range(0, drops, chunk)]
+
+    def run_jax():
+        for a in chunks:
+            out = eng.schedule_batch(*a)
+        jax.block_until_ready(out.t_round)
+
+    run_jax()     # compile
+    row["drops_per_s_jax"] = best_of(run_jax, drops)
+    row["jax_devices"] = ndev
+    row["jax_chunk"] = chunk
+
+    # jax Monte-Carlo sweep: the workload the engine exists for — an R-round
+    # x S-seed policy rollout in one jitted scan. One drop = one scheduled
+    # round; the sweep consumes (t_round, n_selected, max_age,
+    # participation), and XLA prunes the outputs the sweep never reads —
+    # the numpy loop below pays for all of them every drop regardless.
+    r_mc = 8
+    s_mc = max(ndev, drops)          # wide seed axis: one big batch/round
+    gains_mc = np.stack([np.roll(gains, t, axis=0) for t in range(r_mc)])
+    if ndev > 1:
+        # pre-place on the device mesh (an on-device sweep samples its
+        # gains there; the host copy is not part of steady state)
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+        mesh = Mesh(np.array(jax.devices()), ("s",))
+        gains_mc = jax.device_put(
+            jnp.asarray(gains_mc, jnp.float32),
+            NamedSharding(mesh, PartitionSpec(None, "s")))
+
+    def run_jax_mc():
+        out = eng.montecarlo_rounds(gains_mc, n_samples[:s_mc],
+                                    cpu_freq[:s_mc], model_bits,
+                                    shard=ndev > 1)
+        jax.block_until_ready(out["t_round"])
+
+    run_jax_mc()  # compile
+    row["drops_per_s_jax_mc"] = best_of(run_jax_mc, r_mc * s_mc)
+
+    # numpy equivalent of the sweep: schedule + age update per drop
+    from repro.core import aoi
+
+    def run_numpy_mc():
+        ages_mc = aoi.init_ages(n)
+        for t in range(min(r_mc * s_mc, numpy_cap) // r_mc * r_mc):
+            env = RoundEnv(gains[t % drops], n_samples[t % drops],
+                           cpu_freq[t % drops], ages_mc, model_bits)
+            s_ = schedule_age_noma(env, ncfg, flcfg)
+            ages_mc = aoi.update_ages(ages_mc, s_.selected)
+
+    nd_mc = min(r_mc * s_mc, numpy_cap) // r_mc * r_mc
+    run_numpy_mc()
+    row["drops_per_s_numpy_mc"] = best_of(run_numpy_mc, nd_mc)
+    row["speedup_jax_mc_vs_numpy"] = (row["drops_per_s_jax_mc"]
+                                      / row["drops_per_s_numpy_mc"])
+
+    # jax + pallas scoring (interpret mode on CPU -> tiny capped batch)
+    if not skip_pallas:
+        engp = WirelessEngine(ncfg, flcfg, use_pallas=True)
+        pd = (min(drops, pallas_cap)
+              if jax.default_backend() != "tpu" else drops)
+        pargs = (gains[:pd], n_samples[:pd], cpu_freq[:pd], ages[:pd],
+                 model_bits)
+
+        def run_pallas():
+            jax.block_until_ready(engp.schedule_batch(*pargs).t_round)
+
+        run_pallas()
+        row["drops_per_s_jax_pallas"] = best_of(run_pallas, pd)
+        row["pallas_mode"] = engp.pallas_impl
+
+    row["speedup_jax_vs_numpy"] = (row["drops_per_s_jax"]
+                                   / row["drops_per_s_numpy"])
+    return row
+
+
+def run(*, smoke=False, out_path=None, seed=0):
+    import jax
+
+    cases = ([(32, 8, 256), (64, 16, 256)] if smoke
+             else [(64, 16, 256), (256, 64, 512), (1000, 128, 512)])
+    rows = [bench_case(n, k, drops, seed=seed,
+                       pallas_cap=4 if smoke else 8)
+            for (n, k, drops) in cases]
+    result = {
+        "benchmark": "engine_throughput",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    }
+    out_path = out_path or os.path.join(
+        "experiments", "bench", "BENCH_engine_throughput.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"{'N':>6} {'K':>5} {'numpy/s':>9} {'jax/s':>9} "
+          f"{'jax-mc/s':>9} {'pallas/s':>9} {'batch':>7} {'mc sweep':>9}")
+    for r in rows:
+        print(f"{r['n']:>6} {r['k']:>5} {r['drops_per_s_numpy']:>9.0f} "
+              f"{r['drops_per_s_jax']:>9.0f} "
+              f"{r['drops_per_s_jax_mc']:>9.0f} "
+              f"{r.get('drops_per_s_jax_pallas', float('nan')):>9.2f} "
+              f"{r['speedup_jax_vs_numpy']:>6.1f}x "
+              f"{r['speedup_jax_mc_vs_numpy']:>8.1f}x")
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    # the batch is embarrassingly parallel: expose every core as an XLA
+    # host device so the jax columns can shard it (must precede jax import)
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={os.cpu_count()}")
+    main()

@@ -11,6 +11,7 @@ Claim mapping (DESIGN.md section 1):
     C5 predictor_gain      ANN update predictor vs stale-reuse vs none
        kernels             Pallas-kernel micro-benches
        roofline            dry-run derived roofline table
+       engine_throughput   batched wireless engine drops/sec vs numpy
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ import time
 import traceback
 
 from benchmarks import (
+    engine_throughput,
     fairness_age,
     fl_convergence,
     kernels_bench,
@@ -30,6 +32,7 @@ from benchmarks import (
 )
 
 BENCHES = {
+    "engine_throughput": lambda quick: engine_throughput.run(smoke=quick),
     "noma_vs_oma": lambda quick: noma_vs_oma.run(
         trials=50 if quick else 300),
     "fairness_age": lambda quick: fairness_age.run(

@@ -227,6 +227,10 @@ class FLConfig:
     policy: str = "age_noma"         # age_noma|random|channel|round_robin|oma_age
     age_exponent: float = 1.0        # gamma
     t_budget_s: float = 0.0          # 0 = no budget (pure min-round-time)
+    engine: str = "numpy"            # numpy (fp64 reference) | jax (batched
+                                     # core.engine path for the age policies)
+    engine_pallas: bool = False      # jax engine: score rates with the
+                                     # kernels/pairscore.py Pallas kernel
     # client compute model
     cpu_cycles_per_sample: float = 2e6
     cpu_freq_range_ghz: Tuple[float, float] = (0.5, 2.0)

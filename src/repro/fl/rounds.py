@@ -1,7 +1,12 @@
-"""Experiment drivers: run one policy or compare all (the paper's figures)."""
+"""Experiment drivers: run one policy or compare all (the paper's figures),
+plus the Monte-Carlo wireless driver (``run_montecarlo``) that sweeps a
+selection/RA policy over S channel-realization seeds in one vmapped call of
+the batched engine (core/engine.py)."""
 from __future__ import annotations
 
 from typing import Optional
+
+import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig, NOMAConfig
 from repro.data import TaskConfig
@@ -9,6 +14,8 @@ from repro.fl.server import FLServer, History
 
 POLICIES = ("age_noma", "age_noma_budget", "random", "channel",
             "round_robin", "oma_age")
+
+MC_POLICIES = ("age_noma", "channel", "random", "oma_age")
 
 
 def run_experiment(model_cfg: ModelConfig, fl: FLConfig, nomacfg: NOMAConfig,
@@ -46,6 +53,64 @@ def compare_predictors(model_cfg: ModelConfig, fl: FLConfig,
                               rounds=rounds, verbose=verbose, seed=seed,
                               predictor=m)
             for m in modes}
+
+
+def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
+                   flcfg: Optional[FLConfig] = None, *,
+                   n_clients: int = 64, n_seeds: int = 32, rounds: int = 20,
+                   policies=MC_POLICIES, model_bits: float = 1e6,
+                   t_budget: float = 0.0, seed: int = 0,
+                   use_pallas: bool = False) -> dict:
+    """Wireless-layer Monte-Carlo: compare selection/RA policies over
+    ``n_seeds`` independent topologies x ``rounds`` fading realizations,
+    all seeds advanced in ONE vmapped+scanned XLA call per policy.
+
+    Every policy sees the same topologies, data sizes, CPU draws, and
+    fading (paired comparison). Returns per-policy raw per-round arrays
+    plus a scalar ``summary`` (JSON-safe) with mean round time, total time,
+    staleness, and the Jain fairness index of participation.
+    """
+    import jax
+
+    from repro.core.engine import WirelessEngine
+
+    nomacfg = nomacfg or NOMAConfig()
+    flcfg = flcfg or FLConfig()
+    eng = WirelessEngine(nomacfg, flcfg, use_pallas=use_pallas)
+    key = jax.random.PRNGKey(seed)
+    k_top, k_fade, k_cpu, k_ns = jax.random.split(key, 4)
+    s, n, r = n_seeds, n_clients, rounds
+    dist = eng.sample_distances(k_top, (s, n))                 # (S, N)
+    dist_rt = np.broadcast_to(np.asarray(dist), (r, s, n))
+    gains = eng.sample_gains(k_fade, dist_rt)                  # (R, S, N)
+    lo, hi = flcfg.cpu_freq_range_ghz
+    cpu = jax.random.uniform(k_cpu, (s, n), minval=lo * 1e9,
+                             maxval=hi * 1e9)
+    ns_lo, ns_hi = flcfg.samples_per_client
+    n_samples = jax.random.uniform(k_ns, (s, n), minval=ns_lo,
+                                   maxval=ns_hi)
+
+    results: dict = {"summary": {}, "meta": {
+        "n_clients": n, "n_seeds": s, "rounds": r,
+        "model_bits": model_bits, "t_budget": t_budget,
+        "slots": eng.prm.slots, "use_pallas": use_pallas}}
+    for policy in policies:
+        out = eng.montecarlo_rounds(gains, n_samples, cpu, model_bits,
+                                    policy=policy, t_budget=t_budget,
+                                    seed=seed)
+        t_round = np.asarray(out["t_round"])          # (R, S)
+        part = np.asarray(out["participation"])       # (S, N)
+        jain = (part.sum(1) ** 2
+                / np.maximum(n * (part ** 2).sum(1), 1e-12))  # (S,)
+        results[policy] = {k: np.asarray(v) for k, v in out.items()}
+        results["summary"][policy] = {
+            "mean_t_round_s": float(t_round.mean()),
+            "total_time_s": float(t_round.sum(0).mean()),
+            "max_age": int(np.asarray(out["max_age"]).max()),
+            "mean_max_age": float(np.asarray(out["max_age"]).mean()),
+            "jain_participation": float(jain.mean()),
+        }
+    return results
 
 
 def time_to_accuracy(hist: History, target: float) -> Optional[float]:

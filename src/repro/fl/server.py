@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig, NOMAConfig
 from repro.core import aoi, noma
+from repro.core.engine import WirelessEngine
 from repro.core.scheduler import (
     RoundEnv,
     Schedule,
@@ -82,7 +83,8 @@ class FLServer:
                  nomacfg: NOMAConfig, task: TaskConfig, *,
                  policy: str = "age_noma", agg_impl: str = "xla",
                  eval_every: int = 5, seed: Optional[int] = None,
-                 predictor: Optional[str] = None):
+                 predictor: Optional[str] = None,
+                 engine: Optional[str] = None):
         self.cfg = model_cfg
         self.fl = fl
         self.noma = nomacfg
@@ -91,6 +93,15 @@ class FLServer:
         self.agg_impl = agg_impl
         self.eval_every = eval_every
         self.predictor_mode = fl.predictor if predictor is None else predictor
+        # batched wireless engine (core/engine.py) behind FLConfig.engine;
+        # the numpy scheduler stays the fp64 reference path
+        self.engine_mode = fl.engine if engine is None else engine
+        if self.engine_mode not in ("numpy", "jax"):
+            raise ValueError(f"unknown engine {self.engine_mode!r} "
+                             "(expected 'numpy' or 'jax')")
+        self.engine = (WirelessEngine(nomacfg, fl,
+                                      use_pallas=fl.engine_pallas)
+                       if self.engine_mode == "jax" else None)
         seed = fl.seed if seed is None else seed
         self.rng = np.random.default_rng(seed + 10_000)
 
@@ -151,6 +162,8 @@ class FLServer:
         run with or without the update predictor."""
         p = self.policy
         if p == "age_noma":
+            if self.engine is not None:
+                return self.engine.schedule(env, policy=p)
             return schedule_age_noma(env, self.noma, self.fl)
         if p == "age_noma_budget":
             # the paper's JOINT constraint: age priority under a round-time
@@ -160,10 +173,15 @@ class FLServer:
                 ref = schedule_channel_greedy(env, self.noma, self.fl)
                 self._auto_budget = (self.fl.t_budget_s
                                      or 2.0 * max(ref.t_round, 1e-6))
+            if self.engine is not None:
+                return self.engine.schedule(env, t_budget=self._auto_budget,
+                                            policy=p)
             import dataclasses as _dc
             flb = _dc.replace(self.fl, t_budget_s=self._auto_budget)
             return schedule_age_noma(env, self.noma, flb)
         if p == "oma_age":
+            if self.engine is not None:
+                return self.engine.schedule(env, oma=True, policy=p)
             return schedule_age_noma(env, self.noma, self.fl, oma=True)
         if p == "random":
             return schedule_random(self.rng, env, self.noma, self.fl)

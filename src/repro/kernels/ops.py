@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fedagg as _fedagg
+from repro.kernels import pairscore as _pairscore
 from repro.kernels import ref as _ref
 from repro.kernels import swa as _swa
 from repro.kernels import wkv6 as _wkv6
@@ -44,6 +45,21 @@ def weighted_sum(stacked, weights, *, impl: str = "xla",
         out = _fedagg.fedagg_pallas(padded, weights, block_n=bn,
                                     interpret=(impl == "interpret"))[:orig]
     return out.reshape(stacked.shape[1:])
+
+
+def pair_alloc_rates(g_i, g_j, *, n0b: float, pmax: float, bw: float,
+                     oma: bool = False, impl: str = "xla"):
+    """Fused NOMA pair power allocation + SIC rates (p_i, p_j, r_i, r_j).
+    The batched wireless engine's candidate-rate scoring hot path."""
+    return _pairscore.pair_alloc_rates(g_i, g_j, n0b=n0b, pmax=pmax, bw=bw,
+                                       oma=oma, impl=impl)
+
+
+def pair_score_matrix(g_strong, g_weak, *, n0b: float, pmax: float,
+                      bw: float, impl: str = "xla"):
+    """(K, N) min-rate candidate scoring table (see kernels.pairscore)."""
+    return _pairscore.pair_score_matrix(g_strong, g_weak, n0b=n0b,
+                                        pmax=pmax, bw=bw, impl=impl)
 
 
 def wkv6(r, k, v, w_log, u, s0=None, *, impl: str = "xla", chunk: int = 64):

@@ -1,0 +1,186 @@
+"""Parity tier: the batched JAX engine (core/engine.py) against the numpy
+scheduler (core/scheduler.py) as golden, over seeded RoundEnvs.
+
+Covers both engine cores (the no-budget fast path and the lax.while_loop
+eviction path), OMA mode, odd-candidate solo subchannels, eviction-
+triggering budgets, and the Pallas rescoring mode (interpret on CPU).
+
+Envs use continuous n_samples/gains so priorities are distinct almost
+surely — exact key ties are resolved by different (but individually valid)
+orders in the two implementations (DESIGN.md section 5.4).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, NOMAConfig
+from repro.core import noma
+from repro.core.engine import WirelessEngine
+from repro.core.scheduler import RoundEnv, schedule_age_noma
+
+FLCFG = FLConfig()
+# few distinct (slots, n) shapes keep the jit cache small
+CFG_SMALL = NOMAConfig(n_subchannels=3)    # slots 6
+CFG_WIDE = NOMAConfig(n_subchannels=10)    # slots 20
+
+RTOL = 1e-4   # fp32 engine vs fp64 reference
+ATOL_P = 1e-5  # powers (issue acceptance)
+
+
+def make_env(seed, n, ncfg, model_bits=4e6):
+    rng = np.random.default_rng(seed)
+    d = noma.sample_distances(rng, n, ncfg)
+    return RoundEnv(
+        gains=noma.sample_gains(rng, d, ncfg),
+        n_samples=rng.uniform(100, 1000, n),
+        cpu_freq=rng.uniform(0.5e9, 2e9, n),
+        ages=rng.integers(1, 30, n),
+        model_bits=model_bits)
+
+
+def assert_parity(ref, out, *, check_pairs=True):
+    np.testing.assert_array_equal(ref.selected, out.selected)
+    if check_pairs:
+        assert sorted(ref.pairs) == sorted(out.pairs)
+    np.testing.assert_allclose(out.powers, ref.powers, atol=ATOL_P)
+    np.testing.assert_allclose(out.rates, ref.rates, rtol=RTOL)
+    np.testing.assert_allclose(out.t_com[ref.selected],
+                               ref.t_com[ref.selected], rtol=RTOL)
+    assert out.t_round == pytest.approx(ref.t_round, rel=RTOL)
+    np.testing.assert_allclose(out.agg_weights, ref.agg_weights, rtol=RTOL)
+
+
+class TestFastPathParity:
+    """No budget -> the static-count scatter-free fast path."""
+
+    @pytest.mark.parametrize("seed", range(10))
+    @pytest.mark.parametrize("n,ncfg", [(16, CFG_SMALL), (40, CFG_WIDE)])
+    def test_matches_numpy(self, seed, n, ncfg):
+        env = make_env(seed, n, ncfg)
+        eng = WirelessEngine(ncfg, FLCFG)
+        ref = schedule_age_noma(env, ncfg, FLCFG)
+        assert_parity(ref, eng.schedule(env))
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_oma_matches_numpy(self, seed):
+        env = make_env(100 + seed, 16, CFG_SMALL)
+        eng = WirelessEngine(CFG_SMALL, FLCFG)
+        ref = schedule_age_noma(env, CFG_SMALL, FLCFG, oma=True)
+        assert_parity(ref, eng.schedule(env, oma=True))
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_odd_candidates_solo_subchannel(self, seed):
+        """n=5 < 6 slots: odd admission count, weakest client goes solo."""
+        env = make_env(200 + seed, 5, CFG_SMALL)
+        eng = WirelessEngine(CFG_SMALL, FLCFG)
+        ref = schedule_age_noma(env, CFG_SMALL, FLCFG)
+        out = eng.schedule(env)
+        assert_parity(ref, out)
+        solos = [p for p in out.pairs if p[1] == -1]
+        assert len(solos) == 1
+
+    def test_single_client(self):
+        env = make_env(7, 1, CFG_SMALL)
+        eng = WirelessEngine(CFG_SMALL, FLCFG)
+        assert_parity(schedule_age_noma(env, CFG_SMALL, FLCFG),
+                      eng.schedule(env))
+
+
+class TestBudgetPathParity:
+    """Positive budget -> the exact lax.while_loop eviction core."""
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_eviction_matches_numpy(self, seed):
+        env = make_env(300 + seed, 16, CFG_SMALL, model_bits=2e7)
+        eng = WirelessEngine(CFG_SMALL, FLCFG)
+        free = schedule_age_noma(env, CFG_SMALL, FLCFG)
+        budget = free.t_round * 0.5          # forces >= 1 eviction
+        flb = dataclasses.replace(FLCFG, t_budget_s=budget)
+        ref = schedule_age_noma(env, CFG_SMALL, flb)
+        out = eng.schedule(env, t_budget=budget)
+        assert ref.info["evicted"], "budget case must actually evict"
+        assert sorted(ref.info["evicted"]) == sorted(out.info["evicted"])
+        assert_parity(ref, out)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_tiny_budget_evicts_to_floor(self, seed):
+        """A budget below any feasible round time drains to <= 1 client
+        exactly like the reference."""
+        env = make_env(400 + seed, 12, CFG_SMALL, model_bits=2e7)
+        eng = WirelessEngine(CFG_SMALL, FLCFG)
+        budget = 1e-3
+        flb = dataclasses.replace(FLCFG, t_budget_s=budget)
+        ref = schedule_age_noma(env, CFG_SMALL, flb)
+        out = eng.schedule(env, t_budget=budget)
+        assert_parity(ref, out)
+
+    def test_loose_budget_no_eviction(self):
+        env = make_env(42, 16, CFG_SMALL)
+        eng = WirelessEngine(CFG_SMALL, FLCFG)
+        free = schedule_age_noma(env, CFG_SMALL, FLCFG)
+        out = eng.schedule(env, t_budget=free.t_round * 10)
+        assert_parity(free, out)
+        assert out.info["evicted"] == []
+
+
+class TestPallasParity:
+    """use_pallas=True rescoring (interpret mode on CPU) must match too."""
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_pallas_rescore_matches_numpy(self, seed):
+        env = make_env(500 + seed, 16, CFG_SMALL)
+        eng = WirelessEngine(CFG_SMALL, FLCFG, use_pallas=True)
+        ref = schedule_age_noma(env, CFG_SMALL, FLCFG)
+        assert_parity(ref, eng.schedule(env))
+
+
+class TestBatchedConsistency:
+    def test_schedule_batch_matches_per_env(self):
+        """One vmapped call == the same envs scheduled one by one."""
+        import jax.numpy as jnp
+
+        from repro.core.engine import engine_schedule_to_numpy
+
+        envs = [make_env(600 + s, 16, CFG_SMALL) for s in range(6)]
+        eng = WirelessEngine(CFG_SMALL, FLCFG)
+        out = eng.schedule_batch(
+            jnp.asarray(np.stack([e.gains for e in envs])),
+            jnp.asarray(np.stack([e.n_samples for e in envs])),
+            jnp.asarray(np.stack([e.cpu_freq for e in envs])),
+            jnp.asarray(np.stack([e.ages for e in envs])),
+            4e6)
+        for b, env in enumerate(envs):
+            single = eng.schedule(env)
+            batched = engine_schedule_to_numpy(out, b)
+            np.testing.assert_array_equal(single.selected, batched.selected)
+            assert single.pairs == batched.pairs
+            np.testing.assert_allclose(single.rates, batched.rates,
+                                       rtol=1e-6)
+            assert batched.t_round == pytest.approx(single.t_round,
+                                                    rel=1e-6)
+
+    def test_montecarlo_rollout_ages_consistent(self):
+        """The MC driver's age dynamics match a manual per-round loop."""
+        import jax
+
+        eng = WirelessEngine(CFG_SMALL, FLCFG)
+        S, N, R = 3, 12, 5
+        rng = np.random.default_rng(0)
+        key = jax.random.PRNGKey(0)
+        dist = np.asarray(eng.sample_distances(key, (S, N)))
+        gains = np.asarray(eng.sample_gains(
+            jax.random.fold_in(key, 1),
+            np.broadcast_to(dist, (R, S, N))))
+        ns = rng.uniform(100, 1000, (S, N))
+        cf = rng.uniform(0.5e9, 2e9, (S, N))
+        out = eng.montecarlo_rounds(gains, ns, cf, 4e6)
+        # replay seed 0 with the numpy scheduler
+        ages = np.ones(N, dtype=np.int64)
+        for r in range(R):
+            env = RoundEnv(gains[r, 0], ns[0], cf[0], ages, 4e6)
+            ref = schedule_age_noma(env, CFG_SMALL, FLCFG)
+            ages = np.where(ref.selected, 1, ages + 1)
+            assert out["t_round"][r, 0] == pytest.approx(ref.t_round,
+                                                         rel=1e-4)
+            assert int(out["max_age"][r, 0]) == int(ages.max())

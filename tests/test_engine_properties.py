@@ -1,0 +1,129 @@
+"""Property tests for the wireless engines (numpy reference AND batched
+JAX engine), via tests/_hyp.py:
+
+  * power allocation respects 0 <= p <= max_power_w,
+  * pair rates are monotone in the own channel gain,
+  * round_time equals the max of t_cmp + t_com over selected clients.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.configs import FLConfig, NOMAConfig
+from repro.core import noma
+from repro.core.engine import WirelessEngine
+from repro.core.scheduler import RoundEnv, schedule_age_noma
+
+NCFG = NOMAConfig(n_subchannels=3)
+FLCFG = FLConfig()
+ENGINE = WirelessEngine(NCFG, FLCFG)   # shared: one jit cache for the module
+
+G_LO, G_HI = 1e-16, 1e-9   # realistic channel power gain range (W/W)
+
+
+def make_env(seed, n=12, model_bits=4e6):
+    rng = np.random.default_rng(seed)
+    d = noma.sample_distances(rng, n, NCFG)
+    return RoundEnv(
+        gains=noma.sample_gains(rng, d, NCFG),
+        n_samples=rng.uniform(100, 1000, n),
+        cpu_freq=rng.uniform(0.5e9, 2e9, n),
+        ages=rng.integers(1, 30, n),
+        model_bits=model_bits)
+
+
+def both_schedules(env, seed_budget=None):
+    """(numpy, jax) schedules for the same env."""
+    ref = schedule_age_noma(env, NCFG, FLCFG)
+    out = ENGINE.schedule(env)
+    return ref, out
+
+
+class TestPowerBounds:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_powers_within_limits_both_engines(self, seed):
+        env = make_env(seed)
+        for sched in both_schedules(env):
+            p = np.asarray(sched.powers)
+            assert np.all(p >= 0.0)
+            # fp32 engine: float32(P_max) rounds a hair above the fp64 value
+            assert np.all(p <= NCFG.max_power_w * (1 + 1e-6))
+            # selected clients transmit, unselected don't
+            assert np.all(p[sched.selected] > 0)
+            assert np.all(p[~sched.selected] == 0)
+
+    @given(st.floats(G_LO, G_HI), st.floats(G_LO, G_HI))
+    @settings(max_examples=40, deadline=None)
+    def test_closed_form_allocation_bounds(self, ga, gb):
+        g_i, g_j = max(ga, gb), min(ga, gb)
+        p_i, p_j = noma.pair_power_allocation(
+            np.array([g_i]), np.array([g_j]), NCFG)
+        assert 0.0 < p_j[0] <= NCFG.max_power_w + 1e-12
+        assert p_i[0] == NCFG.max_power_w
+        # jax twin agrees
+        from repro.kernels import pairscore
+        pj_jax = np.asarray(pairscore.pair_alloc_rates(
+            np.array([g_i], np.float32), np.array([g_j], np.float32),
+            n0b=NCFG.noise_density * NCFG.bandwidth_hz,
+            pmax=NCFG.max_power_w, bw=NCFG.bandwidth_hz)[1])
+        assert 0.0 < pj_jax[0] <= NCFG.max_power_w + 1e-6
+
+
+class TestRateMonotonicity:
+    @given(st.floats(G_LO, G_HI), st.floats(G_LO, G_HI))
+    @settings(max_examples=40, deadline=None)
+    def test_pair_min_rate_monotone_in_own_gain(self, ga, gb):
+        """Improving either user's channel never hurts the pair min-rate
+        (numpy reference and jax twin)."""
+        from repro.kernels import pairscore
+        g_i, g_j = max(ga, gb), min(ga, gb)
+
+        def min_rate_np(gi, gj):
+            return float(noma.pair_min_rate(np.array([gi]), np.array([gj]),
+                                            NCFG)[0])
+
+        def min_rate_jax(gi, gj):
+            _, _, r_i, r_j = pairscore.pair_alloc_rates(
+                np.array([gi], np.float32), np.array([gj], np.float32),
+                n0b=NCFG.noise_density * NCFG.bandwidth_hz,
+                pmax=NCFG.max_power_w, bw=NCFG.bandwidth_hz)
+            return float(np.minimum(r_i, r_j)[0])
+
+        for min_rate, tol in ((min_rate_np, 1e-9), (min_rate_jax, 1e-3)):
+            base = min_rate(g_i, g_j)
+            assert min_rate(g_i * 1.5, g_j) >= base * (1 - tol)
+            assert min_rate(g_i, g_j * 1.5) >= base * (1 - tol)
+
+    @given(st.floats(G_LO, G_HI))
+    @settings(max_examples=25, deadline=None)
+    def test_solo_rate_monotone(self, g):
+        r1 = noma.solo_rate(NCFG.max_power_w, np.array([g]), NCFG)[0]
+        r2 = noma.solo_rate(NCFG.max_power_w, np.array([2 * g]), NCFG)[0]
+        assert r2 >= r1
+
+
+class TestRoundTime:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_round_time_is_max_over_selected(self, seed):
+        env = make_env(seed)
+        for sched in both_schedules(env):
+            sel = sched.selected
+            expect = np.max((sched.t_cmp + sched.t_com)[sel])
+            assert sched.t_round == pytest.approx(float(expect), rel=1e-5)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=8, deadline=None)
+    def test_budget_respected_or_single_client(self, seed):
+        """Both engines: the budget loop ends within budget or at one
+        client."""
+        env = make_env(seed, model_bits=2e7)
+        budget = schedule_age_noma(env, NCFG, FLCFG).t_round * 0.6
+        import dataclasses
+        flb = dataclasses.replace(FLCFG, t_budget_s=budget)
+        ref = schedule_age_noma(env, NCFG, flb)
+        out = ENGINE.schedule(env, t_budget=budget)
+        for sched in (ref, out):
+            assert (sched.t_round <= budget * (1 + 1e-6)
+                    or sched.selected.sum() == 1)

@@ -93,6 +93,7 @@ class TestAggregate:
 
 
 class TestServer:
+    @pytest.mark.slow
     def test_three_rounds_run_and_learn_signal(self):
         srv = FLServer(TINY, FL, NCFG, TASK, policy="age_noma", eval_every=1)
         hist = srv.run(3)
@@ -103,6 +104,7 @@ class TestServer:
         # ages: selected reset, others grew
         assert srv.ages.max() >= 1
 
+    @pytest.mark.slow
     def test_policies_all_run(self):
         for policy in ("age_noma", "age_noma_budget", "random", "channel",
                        "round_robin", "oma_age"):
@@ -117,6 +119,23 @@ class TestServer:
         s2 = FLServer(TINY, FL, NCFG, TASK, policy="channel")
         np.testing.assert_allclose(s1.distances, s2.distances)
         np.testing.assert_allclose(s1.n_samples, s2.n_samples)
+
+    def test_jax_engine_matches_numpy_selection(self):
+        """FLConfig.engine='jax' routes scheduling through core/engine.py;
+        same seed => same per-round selections and round times as the
+        numpy reference scheduler."""
+        s_np = FLServer(TINY, FL, NCFG, TASK, policy="age_noma",
+                        eval_every=10)
+        s_jx = FLServer(TINY, FL, NCFG, TASK, policy="age_noma",
+                        eval_every=10, engine="jax")
+        assert s_jx.engine is not None
+        for _ in range(2):
+            a = s_np.run_round()
+            b = s_jx.run_round()
+            np.testing.assert_array_equal(a.selected, b.selected)
+            assert sorted(a.pairs) == sorted(b.pairs)
+            assert b.t_round == pytest.approx(a.t_round, rel=1e-4)
+            assert b.info["engine"] == "jax"
 
 
 class TestCheckpoint:

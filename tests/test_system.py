@@ -29,6 +29,7 @@ def histories():
                             rounds=6, seed=1)
 
 
+@pytest.mark.slow
 class TestPaperClaims:
     def test_noma_rounds_faster_than_oma(self, histories):
         """C2 end-to-end: same age-based selection, NOMA total time < OMA."""
