@@ -12,6 +12,7 @@ Claim mapping (DESIGN.md section 1):
        kernels             Pallas-kernel micro-benches
        roofline            dry-run derived roofline table
        engine_throughput   batched wireless engine drops/sec vs numpy
+       scenario_throughput fused vs pre-sampled scenario stepping
 """
 from __future__ import annotations
 
@@ -29,10 +30,13 @@ from benchmarks import (
     pairing_optimality,
     predictor_gain,
     roofline_table,
+    scenario_throughput,
 )
 
 BENCHES = {
     "engine_throughput": lambda quick: engine_throughput.run(smoke=quick),
+    "scenario_throughput": lambda quick: scenario_throughput.run(
+        smoke=quick),
     "noma_vs_oma": lambda quick: noma_vs_oma.run(
         trials=50 if quick else 300),
     "fairness_age": lambda quick: fairness_age.run(

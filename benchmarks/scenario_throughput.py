@@ -1,0 +1,114 @@
+"""Scenario throughput: fused on-device environment stepping vs the
+pre-sampled escape hatch, per registered scenario.
+
+One "drop" = one scheduled Monte-Carlo round for one seed. The *fused*
+column runs ``WirelessEngine.montecarlo_scenario`` — the scenario state
+transition executes on device between rounds and no R x S x N gains array
+ever exists. The *presampled* column is the ``presampled=`` escape hatch:
+``Scenario.rollout`` generates the identical env sequence, the arrays are
+materialized on host (as a caller pre-sampling gains would), and
+``montecarlo_rounds`` replays them — its cost therefore includes the
+rollout + host round-trip, which is exactly what fusion removes.
+
+Writes ``experiments/bench/BENCH_scenario_throughput.json`` (CI
+engine-bench job uploads it). ``--smoke`` shrinks sizes for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def bench_scenario(name, *, n, seeds, rounds, model_bits=1e6, reps=5,
+                   seed=0):
+    import jax
+    import numpy as np
+
+    from repro.configs import FLConfig, NOMAConfig
+    from repro.core.engine import WirelessEngine
+    from repro.sim import as_scenario
+
+    ncfg, flcfg = NOMAConfig(), FLConfig()
+    eng = WirelessEngine(ncfg, flcfg)
+    scn = as_scenario(name, ncfg, flcfg)
+    key = jax.random.PRNGKey(seed)
+    work = rounds * seeds
+
+    def best_of(fn):
+        best = 0.0
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = max(best, work / (time.perf_counter() - t0))
+        return best
+
+    def run_fused():
+        out = eng.montecarlo_scenario(
+            scn, rounds=rounds, n_seeds=seeds, n_clients=n,
+            model_bits=model_bits, policy="age_noma", seed=seed, key=key)
+        jax.block_until_ready(out["t_round"])
+
+    def run_presampled():
+        envs = scn.rollout(key, rounds, (seeds, n))
+        host = tuple(np.asarray(a) for a in envs)   # the host R x S x N
+        out = eng.montecarlo_rounds(host[0], host[1], host[2], model_bits,
+                                    policy="age_noma", seed=seed)
+        jax.block_until_ready(out["t_round"])
+
+    run_fused()        # compile
+    run_presampled()
+    fused = best_of(run_fused)
+    pre = best_of(run_presampled)
+    return {"scenario": name, "n": n, "seeds": seeds, "rounds": rounds,
+            "drops_per_s_fused": fused, "drops_per_s_presampled": pre,
+            "speedup_fused_vs_presampled": fused / pre}
+
+
+def run(*, smoke=False, out_path=None, seed=0):
+    import jax
+
+    from repro.sim import SCENARIOS
+
+    n, seeds, rounds = (32, 16, 8) if smoke else (128, 64, 16)
+    rows = [bench_scenario(name, n=n, seeds=seeds, rounds=rounds,
+                           reps=3 if smoke else 5, seed=seed)
+            for name in SCENARIOS]
+    result = {
+        "benchmark": "scenario_throughput",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    }
+    out_path = out_path or os.path.join(
+        "experiments", "bench", "BENCH_scenario_throughput.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"{'scenario':>18} {'fused/s':>9} {'presampled/s':>13} "
+          f"{'fused gain':>10}")
+    for r in rows:
+        print(f"{r['scenario']:>18} {r['drops_per_s_fused']:>9.0f} "
+              f"{r['drops_per_s_presampled']:>13.0f} "
+              f"{r['speedup_fused_vs_presampled']:>9.2f}x")
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    main()

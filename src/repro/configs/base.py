@@ -231,6 +231,9 @@ class FLConfig:
                                      # core.engine path for the age policies)
     engine_pallas: bool = False      # jax engine: score rates with the
                                      # kernels/pairscore.py Pallas kernel
+    # wireless environment dynamics (repro.sim registry: static_iid |
+    # pedestrian | vehicular | iot_bursty | hotspot_shadowed)
+    scenario: str = "static_iid"
     # client compute model
     cpu_cycles_per_sample: float = 2e6
     cpu_freq_range_ghz: Tuple[float, float] = (0.5, 2.0)

@@ -357,6 +357,16 @@ def _age_priority(ages, n_samples, gains, gamma: float):
     return ages.astype(jnp.float32) ** gamma * w + 1e-12 * gains
 
 
+def round_robin_priority(round_idx, n: int, n_window: int):
+    """(n,) priority whose top-``n_window`` set is the numpy
+    ``schedule_round_robin`` rotating window ``[(t*slots + i) % n]`` —
+    single definition shared by the Monte-Carlo step (traced round_idx)
+    and the FLServer engine path (Python int)."""
+    start = (round_idx * n_window) % n
+    return -(((jnp.arange(n, dtype=jnp.int32) - start) % n)
+             .astype(jnp.float32))
+
+
 def _compute_times(prm: EngineParams, n_samples, cpu_freq):
     """T_cmp = E * C * D_n / f_n (``core.roundtime.compute_times``)."""
     return (prm.local_epochs * prm.cycles_per_sample * n_samples
@@ -692,8 +702,10 @@ class WirelessEngine:
     def montecarlo_rounds(self, gains_seq, n_samples, cpu_freq, model_bits,
                           *, policy: str = "age_noma", t_budget: float = 0.0,
                           seed: int = 0, shard: bool = False):
-        """Roll the AoU state machine over R rounds for S seeds in one jitted
-        scan: gains_seq (R, S, N); n_samples/cpu_freq (S, N).
+        """Roll the AoU state machine over R rounds for S seeds, one batched
+        step per round: gains_seq (R, S, N); n_samples/cpu_freq either
+        (S, N) static or (R, S, N) per-round (the scenario ``presampled=``
+        escape hatch — see ``montecarlo_scenario`` for the fused path).
 
         Returns dict of stacked per-round metrics (t_round (R, S),
         n_selected (R, S), max_age (R, S)) plus participation (S, N).
@@ -709,45 +721,120 @@ class WirelessEngine:
                 from jax.sharding import (Mesh, NamedSharding,
                                           PartitionSpec)
                 mesh = Mesh(np.array(devs), ("s",))
-                gains_seq = jax.device_put(
-                    gains_seq, NamedSharding(mesh,
-                                             PartitionSpec(None, "s")))
+                seq = NamedSharding(mesh, PartitionSpec(None, "s"))
+                per_seed = NamedSharding(mesh, PartitionSpec("s"))
+                gains_seq = jax.device_put(gains_seq, seq)
                 n_samples, cpu_freq = (
-                    jax.device_put(x, NamedSharding(mesh,
-                                                    PartitionSpec("s")))
+                    jax.device_put(x, per_seed if x.ndim == 2 else seq)
                     for x in (n_samples, cpu_freq))
-        n_cand0 = min(self.prm.slots, n)
-        out = _montecarlo_core(
-            gains_seq, n_samples, cpu_freq,
-            jnp.asarray(model_bits, jnp.float32),
-            jax.random.split(jax.random.PRNGKey(seed), r),
-            prm=self.prm, gamma=self.flcfg.age_exponent, policy=policy,
-            t_budget=float(t_budget),
-            n_pairs=max((n_cand0 + 1) // 2, 1), n_cand0=n_cand0,
-            pallas_impl=self.pallas_impl if self.use_pallas else None)
-        return out
+
+        def env_fn(i):
+            return (gains_seq[i],
+                    n_samples if n_samples.ndim == 2 else n_samples[i],
+                    cpu_freq if cpu_freq.ndim == 2 else cpu_freq[i])
+
+        return self._mc_loop(env_fn, r, model_bits, policy=policy,
+                             t_budget=t_budget, seed=seed)
+
+    def montecarlo_scenario(self, scenario, *, rounds: int, n_seeds: int,
+                            n_clients: int, model_bits,
+                            policy: str = "age_noma", t_budget: float = 0.0,
+                            seed: int = 0, key=None, shard: bool = False):
+        """Fully fused Monte-Carlo: the scenario's ``step(state, key) ->
+        (state, env)`` transition advances the wireless environment on
+        device between scheduled rounds — no host-side R x S x N gains
+        materialization ever exists (DESIGN.md section 6).
+
+        ``scenario`` is duck-typed (``repro.sim.Scenario``): the engine
+        only calls ``init_and_keys(key, rounds, (S, N))`` and
+        ``step(state, key)``. ``key`` defaults to ``PRNGKey(seed)`` —
+        ``fl.rounds.run_montecarlo`` passes the same key to
+        ``Scenario.rollout`` so the ``presampled=`` path is bit-identical.
+        """
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        state, env_keys = scenario.init_and_keys(
+            key, rounds, (n_seeds, n_clients))
+        if shard:
+            devs = jax.devices()
+            if len(devs) > 1 and n_seeds % len(devs) == 0:
+                from jax.sharding import (Mesh, NamedSharding,
+                                          PartitionSpec)
+                mesh = Mesh(np.array(devs), ("s",))
+                state = jax.tree.map(
+                    lambda x: jax.device_put(x, NamedSharding(
+                        mesh, PartitionSpec(*(("s",)
+                                              + (None,) * (x.ndim - 1))))),
+                    state)
+        box = [state]
+
+        def env_fn(i):
+            box[0], env = scenario.step(box[0], env_keys[i])
+            return env.gains, env.n_samples, env.cpu_freq
+
+        return self._mc_loop(env_fn, rounds, model_bits, policy=policy,
+                             t_budget=t_budget, seed=seed)
+
+    def _mc_loop(self, env_fn, rounds: int, model_bits, *, policy: str,
+                 t_budget: float, seed: int):
+        """R-round rollout: a Python loop of jitted per-round steps rather
+        than ``lax.scan`` — on CPU the XLA while-loop runs the identical
+        body ~1.7x slower than back-to-back jit dispatches. ``env_fn(i)``
+        yields round i's (gains, n_samples, cpu_freq), either sliced from
+        pre-sampled arrays or stepped out of a scenario state."""
+        keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
+        mb = jnp.asarray(model_bits, jnp.float32)
+        ages = part = None
+        t_rounds, n_sels, max_ages = [], [], []
+        for i in range(rounds):
+            gains, n_samples, cpu_freq = env_fn(i)
+            if ages is None:
+                s, n = gains.shape
+                n_cand0 = min(self.prm.slots, n)
+                n_pairs = max((n_cand0 + 1) // 2, 1)
+                ages = jnp.ones((s, n), jnp.float32)
+                part = jnp.zeros((s, n), jnp.float32)
+            ages, part, t_round, n_sel, max_age = _montecarlo_step(
+                ages, part, gains, keys[i], n_samples, cpu_freq, mb,
+                jnp.asarray(i, jnp.int32),
+                prm=self.prm, gamma=self.flcfg.age_exponent, policy=policy,
+                t_budget=float(t_budget), n_pairs=n_pairs, n_cand0=n_cand0,
+                pallas_impl=self.pallas_impl if self.use_pallas else None)
+            t_rounds.append(t_round)
+            n_sels.append(n_sel)
+            max_ages.append(max_age)
+        return {"t_round": jnp.stack(t_rounds),
+                "n_selected": jnp.stack(n_sels),
+                "max_age": jnp.stack(max_ages), "participation": part,
+                "final_ages": ages}
 
 
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "policy",
                                              "t_budget", "n_pairs",
                                              "n_cand0", "pallas_impl"))
 def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
-                     model_bits, *, prm: EngineParams, gamma: float,
-                     policy: str, t_budget: float, n_pairs: int,
-                     n_cand0: int, pallas_impl: Optional[str] = None):
-    """One Monte-Carlo round over all seeds. Called in a Python loop rather
-    than ``lax.scan`` — on CPU the XLA while-loop runs the identical body
-    ~1.7x slower than back-to-back jit dispatches."""
+                     model_bits, round_idx, *, prm: EngineParams,
+                     gamma: float, policy: str, t_budget: float,
+                     n_pairs: int, n_cand0: int,
+                     pallas_impl: Optional[str] = None):
+    """One Monte-Carlo round over all seeds; every policy in
+    ``fl.rounds.POLICIES`` resolves to a priority vector here
+    (``age_noma_budget`` is age priority + the caller's positive
+    ``t_budget``). ``round_idx`` is traced so the round-robin window can
+    advance without recompiling."""
     s, n = gains.shape
     oma = policy == "oma_age"
     t_cmp = _compute_times(prm, n_samples, cpu_freq)
     mb = jnp.broadcast_to(model_bits, (s,))
-    if policy in ("age_noma", "oma_age"):
+    if policy in ("age_noma", "age_noma_budget", "oma_age"):
         prio = _age_priority(ages, n_samples, gains, gamma)
     elif policy == "channel":
         prio = gains
     elif policy == "random":
         prio = jax.random.uniform(key, gains.shape)
+    elif policy == "round_robin":
+        prio = jnp.broadcast_to(round_robin_priority(round_idx, n, n_cand0),
+                                gains.shape)
     else:
         raise ValueError(f"unknown montecarlo policy {policy!r}")
     if t_budget <= 0.0:
@@ -764,29 +851,6 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
     ages2 = jnp.where(sel, 1.0, ages + 1.0)
     return (ages2, part + sel, sched.t_round, jnp.sum(sel, axis=1),
             jnp.max(ages2, axis=1))
-
-
-def _montecarlo_core(gains_seq, n_samples, cpu_freq, model_bits, keys, *,
-                     prm: EngineParams, gamma: float, policy: str,
-                     t_budget: float, n_pairs: int, n_cand0: int,
-                     pallas_impl: Optional[str] = None):
-    """R-round rollout: a Python loop of jitted per-round steps."""
-    r, s, n = gains_seq.shape
-    ages = jnp.ones((s, n), jnp.float32)
-    part = jnp.zeros((s, n), jnp.float32)
-    t_rounds, n_sels, max_ages = [], [], []
-    for i in range(r):
-        ages, part, t_round, n_sel, max_age = _montecarlo_step(
-            ages, part, gains_seq[i], keys[i], n_samples, cpu_freq,
-            model_bits, prm=prm, gamma=gamma, policy=policy,
-            t_budget=t_budget, n_pairs=n_pairs, n_cand0=n_cand0,
-            pallas_impl=pallas_impl)
-        t_rounds.append(t_round)
-        n_sels.append(n_sel)
-        max_ages.append(max_age)
-    return {"t_round": jnp.stack(t_rounds), "n_selected": jnp.stack(n_sels),
-            "max_age": jnp.stack(max_ages), "participation": part,
-            "final_ages": ages}
 
 
 def engine_schedule_to_numpy(out: EngineSchedule, b: int,

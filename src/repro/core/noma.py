@@ -35,6 +35,17 @@ def sample_distances(rng: np.random.Generator, n: int,
     return np.sqrt(r2)
 
 
+def sample_positions(rng: np.random.Generator, n: int,
+                     cfg: NOMAConfig) -> np.ndarray:
+    """(n, 2) uniform-in-annulus (x, y) positions — the mobility scenarios
+    (repro.sim) track full positions so path loss can be re-derived as
+    clients move; ``sample_distances`` stays the distance-only marginal."""
+    r = np.sqrt(rng.uniform(cfg.min_radius_m ** 2, cfg.cell_radius_m ** 2,
+                            size=n))
+    th = rng.uniform(0.0, 2.0 * np.pi, size=n)
+    return np.stack([r * np.cos(th), r * np.sin(th)], axis=-1)
+
+
 def sample_gains(rng: np.random.Generator, distances: np.ndarray,
                  cfg: NOMAConfig) -> np.ndarray:
     """Block-fading channel power gains g_n = rho0 * d^-kappa * |h|^2,

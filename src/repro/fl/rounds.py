@@ -1,7 +1,8 @@
 """Experiment drivers: run one policy or compare all (the paper's figures),
-plus the Monte-Carlo wireless driver (``run_montecarlo``) that sweeps a
-selection/RA policy over S channel-realization seeds in one vmapped call of
-the batched engine (core/engine.py)."""
+plus the Monte-Carlo wireless driver (``run_montecarlo``) that sweeps every
+selection/RA policy over S environment-realization seeds, the scenario
+dynamics (repro.sim) stepping on device fused with the batched engine
+(core/engine.py)."""
 from __future__ import annotations
 
 from typing import Optional
@@ -15,7 +16,10 @@ from repro.fl.server import FLServer, History
 POLICIES = ("age_noma", "age_noma_budget", "random", "channel",
             "round_robin", "oma_age")
 
-MC_POLICIES = ("age_noma", "channel", "random", "oma_age")
+# the Monte-Carlo driver covers every FLServer policy (engine-side
+# round_robin/random priorities + budget auto-calibration); the old
+# reduced tuple is kept as an alias for back-compat
+MC_POLICIES = POLICIES
 
 
 def run_experiment(model_cfg: ModelConfig, fl: FLConfig, nomacfg: NOMAConfig,
@@ -60,44 +64,72 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
                    n_clients: int = 64, n_seeds: int = 32, rounds: int = 20,
                    policies=MC_POLICIES, model_bits: float = 1e6,
                    t_budget: float = 0.0, seed: int = 0,
-                   use_pallas: bool = False) -> dict:
+                   use_pallas: bool = False,
+                   scenario: str | object = "static_iid",
+                   presampled: bool = False, shard: bool = False) -> dict:
     """Wireless-layer Monte-Carlo: compare selection/RA policies over
-    ``n_seeds`` independent topologies x ``rounds`` fading realizations,
-    all seeds advanced in ONE vmapped+scanned XLA call per policy.
+    ``n_seeds`` independent environment realizations x ``rounds``, one
+    batched engine call per round.
 
-    Every policy sees the same topologies, data sizes, CPU draws, and
-    fading (paired comparison). Returns per-policy raw per-round arrays
-    plus a scalar ``summary`` (JSON-safe) with mean round time, total time,
+    ``scenario`` (registry name, ``ScenarioConfig`` or ``Scenario``)
+    selects the environment dynamics (``repro.sim``): the scenario state
+    steps on device inside the rollout — one PRNG key threads through the
+    fused loop and no host-side ``rounds x seeds x N`` gains array is ever
+    materialized. ``presampled=True`` is the escape hatch that
+    pre-generates the identical env sequence via ``Scenario.rollout`` and
+    replays it through the pre-sampled engine path (bit-for-bit equal
+    outputs; parity tests use it).
+
+    Every policy sees the same scenario key, hence identical topologies,
+    mobility, fading, CPU, and data-arrival traces (paired comparison).
+    ``age_noma_budget`` auto-calibrates its budget to 2x the mean
+    channel-greedy round time of round 0 when ``t_budget`` is unset,
+    mirroring ``FLServer``. Returns per-policy raw per-round arrays plus a
+    scalar ``summary`` (JSON-safe) with mean round time, total time,
     staleness, and the Jain fairness index of participation.
     """
     import jax
+    import jax.numpy as jnp
 
     from repro.core.engine import WirelessEngine
+    from repro.sim import as_scenario
 
     nomacfg = nomacfg or NOMAConfig()
     flcfg = flcfg or FLConfig()
     eng = WirelessEngine(nomacfg, flcfg, use_pallas=use_pallas)
-    key = jax.random.PRNGKey(seed)
-    k_top, k_fade, k_cpu, k_ns = jax.random.split(key, 4)
+    scn = as_scenario(scenario, nomacfg, flcfg)
     s, n, r = n_seeds, n_clients, rounds
-    dist = eng.sample_distances(k_top, (s, n))                 # (S, N)
-    dist_rt = np.broadcast_to(np.asarray(dist), (r, s, n))
-    gains = eng.sample_gains(k_fade, dist_rt)                  # (R, S, N)
-    lo, hi = flcfg.cpu_freq_range_ghz
-    cpu = jax.random.uniform(k_cpu, (s, n), minval=lo * 1e9,
-                             maxval=hi * 1e9)
-    ns_lo, ns_hi = flcfg.samples_per_client
-    n_samples = jax.random.uniform(k_ns, (s, n), minval=ns_lo,
-                                   maxval=ns_hi)
+    k_env = jax.random.PRNGKey(seed)
+
+    envs = scn.rollout(k_env, r, (s, n)) if presampled else None
+    auto_budget = None
+    if "age_noma_budget" in policies and t_budget <= 0.0:
+        env0 = (tuple(a[0] for a in envs) if envs is not None
+                else scn.first_env(k_env, r, (s, n)))
+        ref = eng.schedule_batch(env0[0], env0[1], env0[2],
+                                 jnp.ones((s, n), jnp.float32), model_bits,
+                                 priority=env0[0])
+        auto_budget = 2.0 * max(float(np.asarray(ref.t_round).mean()), 1e-6)
 
     results: dict = {"summary": {}, "meta": {
         "n_clients": n, "n_seeds": s, "rounds": r,
         "model_bits": model_bits, "t_budget": t_budget,
+        "scenario": scn.name, "presampled": bool(presampled),
         "slots": eng.prm.slots, "use_pallas": use_pallas}}
     for policy in policies:
-        out = eng.montecarlo_rounds(gains, n_samples, cpu, model_bits,
-                                    policy=policy, t_budget=t_budget,
-                                    seed=seed)
+        tb = t_budget
+        if policy == "age_noma_budget" and tb <= 0.0:
+            tb = auto_budget
+        if envs is not None:
+            out = eng.montecarlo_rounds(
+                np.asarray(envs.gains), np.asarray(envs.n_samples),
+                np.asarray(envs.cpu_freq), model_bits, policy=policy,
+                t_budget=tb, seed=seed, shard=shard)
+        else:
+            out = eng.montecarlo_scenario(
+                scn, rounds=r, n_seeds=s, n_clients=n,
+                model_bits=model_bits, policy=policy, t_budget=tb,
+                seed=seed, key=k_env, shard=shard)
         t_round = np.asarray(out["t_round"])          # (R, S)
         part = np.asarray(out["participation"])       # (S, N)
         jain = (part.sum(1) ** 2
@@ -110,6 +142,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
             "mean_max_age": float(np.asarray(out["max_age"]).mean()),
             "jain_participation": float(jain.mean()),
         }
+        if policy == "age_noma_budget":
+            results["summary"][policy]["t_budget_s"] = float(tb)
     return results
 
 

@@ -2,7 +2,10 @@
 the training substrate (models/, optim/, data/).
 
 Per round:
-  1. sample block-fading gains; build RoundEnv (incl. current AoU ages);
+  1. step the wireless scenario (repro.sim.NumpyScenario — mobility,
+     correlated fading, compute/data dynamics; static_iid reproduces the
+     legacy block-fading stream bit-for-bit) -> gains/n_samples/cpu; build
+     RoundEnv (incl. current AoU ages);
   2. run the selection policy -> Schedule (mask, pairs, powers, rates, T)
      via the shared ``select()`` path (every policy, with or without the
      update predictor);
@@ -24,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig, NOMAConfig
-from repro.core import aoi, noma
+from repro.core import aoi
 from repro.core.engine import WirelessEngine
 from repro.core.scheduler import (
     RoundEnv,
@@ -45,6 +48,7 @@ from repro.fl.aggregate import aggregate_deltas, apply_aggregate, \
 from repro.fl.client import LocalTrainer
 from repro.fl.predictor import UpdatePredictor
 from repro.models import zoo
+from repro.sim import NumpyScenario, get_scenario_config
 
 
 @dataclasses.dataclass
@@ -84,7 +88,8 @@ class FLServer:
                  policy: str = "age_noma", agg_impl: str = "xla",
                  eval_every: int = 5, seed: Optional[int] = None,
                  predictor: Optional[str] = None,
-                 engine: Optional[str] = None):
+                 engine: Optional[str] = None,
+                 scenario: Optional[str] = None):
         self.cfg = model_cfg
         self.fl = fl
         self.noma = nomacfg
@@ -109,11 +114,15 @@ class FLServer:
         self.clients = partition_clients(fl, task)
         self.n_samples = np.array([c.n_samples for c in self.clients],
                                   dtype=np.float64)
-        self.distances = noma.sample_distances(self.rng, fl.n_clients,
-                                               nomacfg)
-        self.cpu_freq = self.rng.uniform(fl.cpu_freq_range_ghz[0] * 1e9,
-                                         fl.cpu_freq_range_ghz[1] * 1e9,
-                                         fl.n_clients)
+        # wireless environment dynamics: the fp64 scenario twin
+        # (repro.sim.numpy_ref) owns topology, fading, and compute/data
+        # processes; static_iid consumes exactly the legacy rng stream
+        # (distances, cpu at init; one Exp(1) vector per round)
+        self.scenario_name = fl.scenario if scenario is None else scenario
+        self.scenario = NumpyScenario(
+            get_scenario_config(self.scenario_name), nomacfg, fl)
+        self.distances, self.cpu_freq = self.scenario.init(
+            self.rng, fl.n_clients, n_samples=self.n_samples)
         # model + trainer
         self.params, _ = zoo.init_model(jax.random.PRNGKey(seed), model_cfg)
         self.trainer = LocalTrainer(model_cfg, fl.lr, fl.momentum)
@@ -183,20 +192,43 @@ class FLServer:
             if self.engine is not None:
                 return self.engine.schedule(env, oma=True, policy=p)
             return schedule_age_noma(env, self.noma, self.fl, oma=True)
+        # non-age policies: the engine path expresses each as a priority
+        # vector (full engine coverage of POLICIES); numpy stays the
+        # reference implementation
+        n = self.fl.n_clients
         if p == "random":
+            if self.engine is not None:
+                return self.engine.schedule(
+                    env, t_budget=0.0, policy=p,
+                    priority=self.rng.uniform(size=n))
             return schedule_random(self.rng, env, self.noma, self.fl)
         if p == "channel":
+            if self.engine is not None:
+                return self.engine.schedule(env, t_budget=0.0, policy=p,
+                                            priority=env.gains)
             return schedule_channel_greedy(env, self.noma, self.fl)
         if p == "round_robin":
+            if self.engine is not None:
+                from repro.core.engine import round_robin_priority
+                slots = min(self.noma.n_subchannels
+                            * self.noma.users_per_subchannel, n)
+                return self.engine.schedule(
+                    env, t_budget=0.0, policy=p,
+                    priority=round_robin_priority(self.round_idx, n, slots))
             return schedule_round_robin(self.round_idx, env, self.noma,
                                         self.fl)
         raise ValueError(f"unknown policy {p!r}")
 
     # -- one round ---------------------------------------------------------
     def run_round(self) -> Schedule:
-        gains = noma.sample_gains(self.rng, self.distances, self.noma)
-        env = RoundEnv(gains=gains, n_samples=self.n_samples,
-                       cpu_freq=self.cpu_freq, ages=self.ages,
+        # advance the wireless environment; under dynamic scenarios the
+        # env's n_samples only shape the SCHEDULER's view (age priority
+        # weighting + T_cmp) — local batches and aggregation weights stay
+        # tied to the fixed client datasets, so real and predicted deltas
+        # share one weight convention
+        gains, env_n_samples, env_cpu = self.scenario.step(self.rng)
+        env = RoundEnv(gains=gains, n_samples=env_n_samples,
+                       cpu_freq=env_cpu, ages=self.ages,
                        model_bits=self.model_bits)
         sched = self.select(env)
 

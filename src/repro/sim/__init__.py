@@ -1,0 +1,30 @@
+"""Scenario subsystem — dynamic wireless environments (mobility +
+correlated fading + heterogeneous compute) as pure state-transition
+functions fused into the batched Monte-Carlo engine (DESIGN.md section 6).
+"""
+from repro.sim.numpy_ref import NumpyScenario
+from repro.sim.processes import bessel_j0, jakes_rho
+from repro.sim.scenario import (
+    SCENARIOS,
+    RoundEnvBatch,
+    Scenario,
+    ScenarioConfig,
+    ScenarioParams,
+    ScenarioState,
+    as_scenario,
+    get_scenario_config,
+)
+
+__all__ = [
+    "SCENARIOS",
+    "NumpyScenario",
+    "RoundEnvBatch",
+    "Scenario",
+    "ScenarioConfig",
+    "ScenarioParams",
+    "ScenarioState",
+    "as_scenario",
+    "bessel_j0",
+    "get_scenario_config",
+    "jakes_rho",
+]

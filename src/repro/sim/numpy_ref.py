@@ -1,0 +1,159 @@
+"""Numpy fp64 twin of the scenario processes — the golden reference path.
+
+``NumpyScenario`` drives the FLServer's wireless environment (one env,
+``(N,)``-shaped, mutable state, a shared ``np.random.Generator``). It is
+the semantic reference for ``sim/scenario.py`` exactly as
+``core/scheduler.py`` is for ``core/engine.py``.
+
+Stream compatibility: under ``static_iid`` the draw sequence is exactly
+the legacy FLServer stream — ``noma.sample_distances`` then the CPU
+uniform at init, one ``Exp(1)`` vector per round — so enabling the
+scenario path changes nothing for existing seeds (pinned by
+``tests/test_scenario.py``). Draws belonging to disabled processes are
+skipped, never burned.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import FLConfig, NOMAConfig
+from repro.core import noma
+from repro.sim.scenario import ScenarioConfig, ScenarioParams
+
+
+class NumpyScenario:
+    """Single-env fp64 scenario with the same process semantics as the
+    jitted ``Scenario`` (statistical parity pinned by tests)."""
+
+    def __init__(self, scfg: ScenarioConfig, ncfg: NOMAConfig,
+                 flcfg: FLConfig):
+        self.cfg = scfg
+        self.ncfg = ncfg
+        self.prm = ScenarioParams.from_configs(scfg, ncfg, flcfg)
+        self.distances: Optional[np.ndarray] = None
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    # -- init --------------------------------------------------------------
+
+    def _annulus(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        return noma.sample_positions(rng, n, self.ncfg)
+
+    def init(self, rng: np.random.Generator, n: int,
+             n_samples: Optional[np.ndarray] = None
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Draw the initial environment; returns (distances, cpu_freq).
+
+        ``n_samples`` (the server's real client dataset sizes) seeds the
+        data-arrival base; left None they are drawn uniform in the
+        configured range (the Monte-Carlo convention).
+        """
+        prm = self.prm
+        self.n = n
+        if prm.mobility == "fixed":
+            # legacy stream: one uniform draw via noma.sample_distances
+            self.distances = noma.sample_distances(rng, n, self.ncfg)
+            self.pos = None
+        else:
+            self.pos = self._annulus(rng, n)
+            self.distances = np.maximum(
+                np.linalg.norm(self.pos, axis=-1), prm.min_radius_m)
+        self.cpu_base = rng.uniform(prm.cpu_lo, prm.cpu_hi, n)
+        # draws below only exist for the processes that are enabled, so the
+        # static_iid stream stays exactly (distances, cpu)
+        if prm.mobility != "fixed":
+            self.speed = rng.uniform(prm.v_min, prm.v_max, n)
+            if prm.mobility == "waypoint":
+                self.aux = self._annulus(rng, n)
+            else:
+                th = rng.uniform(0.0, 2.0 * np.pi, n)
+                self.aux = self.speed[:, None] * np.stack(
+                    [np.cos(th), np.sin(th)], axis=-1)
+        else:
+            self.speed = np.zeros(n)
+            self.aux = None
+        if prm.channel == "ar1":
+            self.h = rng.normal(size=(n, 2)) * np.sqrt(0.5)
+        if prm.shadow_sigma_db > 0.0:
+            self.shadow_db = rng.normal(0.0, prm.shadow_sigma_db, n)
+        else:
+            self.shadow_db = np.zeros(n)
+        self.throttled = np.zeros(n, bool)
+        self.n_base = (np.asarray(n_samples, np.float64)
+                       if n_samples is not None
+                       else rng.uniform(prm.ns_lo, prm.ns_hi, n))
+        self.n_cur = self.n_base.copy()
+        return self.distances, self.cpu_base.copy()
+
+    # -- step --------------------------------------------------------------
+
+    def step(self, rng: np.random.Generator
+             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Advance one round; returns (gains, n_samples, cpu_freq) fp64."""
+        prm = self.prm
+        n = self.n
+
+        if prm.mobility == "waypoint":
+            delta = self.aux - self.pos
+            d = np.linalg.norm(delta, axis=-1)
+            step_len = self.speed * prm.move_s
+            arrived = d <= step_len
+            unit = delta / np.maximum(d, 1e-9)[:, None]
+            self.pos = np.where(arrived[:, None], self.aux,
+                                self.pos + unit * step_len[:, None])
+            new_wp = self._annulus(rng, n)
+            new_v = rng.uniform(prm.v_min, prm.v_max, n)
+            self.aux = np.where(arrived[:, None], new_wp, self.aux)
+            self.speed = np.where(arrived, new_v, self.speed)
+        elif prm.mobility == "drift":
+            pos2 = self.pos + self.aux * prm.move_s
+            r = np.linalg.norm(pos2, axis=-1)
+            out = r > prm.cell_radius_m
+            self.aux = np.where(out[:, None], -self.aux, self.aux)
+            self.pos = np.where(
+                out[:, None],
+                pos2 * (prm.cell_radius_m / np.maximum(r, 1e-9))[:, None],
+                pos2)
+        if prm.mobility != "fixed":
+            self.distances = np.maximum(
+                np.linalg.norm(self.pos, axis=-1), prm.min_radius_m)
+
+        if prm.channel == "ar1":
+            w = rng.normal(size=(n, 2)) * np.sqrt(0.5)
+            rho = prm.rho_fading
+            self.h = rho * self.h + np.sqrt(max(1.0 - rho * rho, 0.0)) * w
+            fpow = np.sum(self.h * self.h, axis=-1)
+            gains = (prm.ref_path_loss
+                     * self.distances ** (-prm.path_loss_exp) * fpow)
+        else:
+            # exactly noma.sample_gains: one Exp(1) draw (legacy stream)
+            gains = noma.sample_gains(rng, self.distances, self.ncfg)
+        if prm.shadow_sigma_db > 0.0:
+            if prm.mobility != "fixed":
+                rho_s = np.exp(-self.speed * prm.move_s
+                               / prm.shadow_decorr_m)
+                z = rng.normal(size=n)
+                self.shadow_db = (rho_s * self.shadow_db
+                                  + np.sqrt(1.0 - rho_s * rho_s)
+                                  * prm.shadow_sigma_db * z)
+            gains = gains * 10.0 ** (self.shadow_db / 10.0)
+
+        cpu = self.cpu_base
+        if prm.compute == "bursty":
+            u = rng.uniform(size=n)
+            self.throttled = np.where(self.throttled, u >= prm.p_recover,
+                                      u < prm.p_throttle)
+            cpu = cpu * np.where(self.throttled, prm.throttle_factor, 1.0)
+
+        if prm.data == "dynamic":
+            eps = rng.normal(size=n)
+            n2 = (self.n_base + prm.data_phi * (self.n_cur - self.n_base)
+                  + prm.data_jitter * self.n_base * eps)
+            self.n_cur = np.clip(n2, np.maximum(0.2 * self.n_base, 1.0),
+                                 2.0 * self.n_base)
+
+        return gains, self.n_cur.copy(), np.asarray(cpu, np.float64).copy()

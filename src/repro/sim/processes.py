@@ -1,0 +1,170 @@
+"""Stochastic process primitives for dynamic wireless scenarios.
+
+Every process is a pure ``(state, key) -> state'`` transition over
+fixed-shape JAX arrays so a scenario step composes into one jit (and fuses
+with the engine's Monte-Carlo round; DESIGN.md section 6). Each process has
+an fp64 numpy twin in ``sim/numpy_ref.py`` used by the FLServer reference
+path and the statistical parity tests.
+
+Channel models
+--------------
+* i.i.d. block fading — fresh ``|h|^2 ~ Exp(1)`` per round (today's
+  ``noma.sample_gains`` behavior).
+* Gauss-Markov AR(1) Rayleigh — complex ``h' = rho h + sqrt(1-rho^2) w``,
+  ``w ~ CN(0,1)``, with Jakes-style correlation ``rho = J0(2 pi f_d T)``
+  (Doppler ``f_d``, coherence step ``T``). Marginally ``|h|^2 ~ Exp(1)``,
+  so the stationary gain distribution matches the i.i.d. model exactly.
+* Log-normal shadowing — AR(1) in dB (Gudmundson): the per-client
+  correlation ``rho_s = exp(-v T_move / d_corr)`` follows speed, so static
+  clients keep their shadowing draw and fast clients decorrelate.
+
+Mobility models
+---------------
+* fixed — distances drawn once (today's behavior);
+* waypoint — random-waypoint inside the annulus: move toward the target at
+  the client's speed, redraw target + speed on arrival;
+* drift — vehicular constant-velocity motion reflected at the cell edge.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Bessel J0 (host-side, config time) — Jakes autocorrelation
+# ---------------------------------------------------------------------------
+
+
+def bessel_j0(x):
+    """J0 via the Abramowitz & Stegun 9.4.1 / 9.4.3 polynomial
+    approximations (|err| < 5e-8 over the real line). Pure numpy so the
+    Jakes correlation needs no scipy dependency; evaluated host-side once
+    per scenario config."""
+    x = np.abs(np.asarray(x, dtype=np.float64))
+    small = x <= 3.0
+    t = np.where(small, x / 3.0, 0.0)
+    t2 = t * t
+    p_small = (1.0 + t2 * (-2.2499997 + t2 * (1.2656208 + t2 * (
+        -0.3163866 + t2 * (0.0444479 + t2 * (-0.0039444 + t2 * 0.00021))))))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        s = np.where(small, 1.0, 3.0 / np.maximum(x, 3.0))
+    f0 = (0.79788456 + s * (-0.00000077 + s * (-0.00552740 + s * (
+        -0.00009512 + s * (0.00137237 + s * (-0.00072805
+                                             + s * 0.00014476))))))
+    th0 = (x - 0.78539816 + s * (-0.04166397 + s * (-0.00003954 + s * (
+        0.00262573 + s * (-0.00054125 + s * (-0.00029333
+                                             + s * 0.00013558))))))
+    p_large = f0 * np.cos(th0) / np.sqrt(np.maximum(x, 3.0))
+    out = np.where(small, p_small, p_large)
+    return out if out.ndim else float(out)
+
+
+def jakes_rho(doppler_hz: float, slot_s: float) -> float:
+    """Per-round fading autocorrelation ``J0(2 pi f_d T)`` (Jakes).
+    ``doppler_hz <= 0`` degenerates to fully correlated (static) fading —
+    callers use ``channel="iid"`` for the uncorrelated limit instead."""
+    return float(bessel_j0(2.0 * np.pi * doppler_hz * slot_s))
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+
+def annulus_positions(key, shape, r_min: float, r_max: float):
+    """Uniform-in-annulus (x, y) positions, shape ``shape + (2,)``."""
+    k_r, k_th = jax.random.split(key)
+    r = jnp.sqrt(jax.random.uniform(k_r, shape, minval=r_min ** 2,
+                                    maxval=r_max ** 2))
+    th = jax.random.uniform(k_th, shape, minval=0.0, maxval=2.0 * jnp.pi)
+    return jnp.stack([r * jnp.cos(th), r * jnp.sin(th)], axis=-1)
+
+
+def distances_of(pos, r_min: float):
+    """BS distance of (…, 2) positions, floored at the exclusion radius."""
+    return jnp.maximum(jnp.linalg.norm(pos, axis=-1), r_min)
+
+
+# ---------------------------------------------------------------------------
+# mobility transitions
+# ---------------------------------------------------------------------------
+
+
+def waypoint_step(pos, waypoint, speed, key, *, move_s: float,
+                  r_min: float, r_max: float, v_min: float, v_max: float):
+    """Random-waypoint: advance toward the target by ``speed * move_s``;
+    on arrival redraw the waypoint (uniform in the annulus) and speed."""
+    k_wp, k_v = jax.random.split(key)
+    delta = waypoint - pos
+    d = jnp.linalg.norm(delta, axis=-1)
+    step_len = speed * move_s
+    arrived = d <= step_len
+    unit = delta / jnp.maximum(d, 1e-9)[..., None]
+    pos2 = jnp.where(arrived[..., None], waypoint,
+                     pos + unit * step_len[..., None])
+    new_wp = annulus_positions(k_wp, pos.shape[:-1], r_min, r_max)
+    new_v = jax.random.uniform(k_v, speed.shape, minval=v_min, maxval=v_max)
+    waypoint2 = jnp.where(arrived[..., None], new_wp, waypoint)
+    speed2 = jnp.where(arrived, new_v, speed)
+    return pos2, waypoint2, speed2
+
+
+def drift_step(pos, vel, *, move_s: float, r_max: float):
+    """Vehicular drift: constant velocity, reflected at the cell edge
+    (velocity reversed, position pulled back onto the boundary circle)."""
+    pos2 = pos + vel * move_s
+    r = jnp.linalg.norm(pos2, axis=-1)
+    out = r > r_max
+    vel2 = jnp.where(out[..., None], -vel, vel)
+    pos2 = jnp.where(out[..., None],
+                     pos2 * (r_max / jnp.maximum(r, 1e-9))[..., None], pos2)
+    return pos2, vel2
+
+
+# ---------------------------------------------------------------------------
+# channel transitions
+# ---------------------------------------------------------------------------
+
+
+def iid_fading_pow(key, shape):
+    """Fresh Rayleigh power ``|h|^2 ~ Exp(1)`` (block fading)."""
+    return jax.random.exponential(key, shape)
+
+
+def ar1_fading_step(h, key, *, rho: float):
+    """Gauss-Markov complex fading: ``h' = rho h + sqrt(1-rho^2) w``,
+    ``w ~ CN(0,1)`` stored as (…, 2) real/imag. Returns (h', |h'|^2)."""
+    w = jax.random.normal(key, h.shape) * np.sqrt(0.5)
+    h2 = rho * h + np.sqrt(max(1.0 - rho * rho, 0.0)) * w
+    return h2, jnp.sum(h2 * h2, axis=-1)
+
+
+def shadow_step(shadow_db, speed, key, *, sigma_db: float, move_s: float,
+                decorr_m: float):
+    """Gudmundson AR(1) shadowing in dB; per-client correlation
+    ``exp(-v T / d_corr)`` (static clients keep their draw)."""
+    rho_s = jnp.exp(-speed * move_s / decorr_m)
+    z = jax.random.normal(key, shadow_db.shape)
+    return rho_s * shadow_db + jnp.sqrt(1.0 - rho_s * rho_s) * sigma_db * z
+
+
+# ---------------------------------------------------------------------------
+# client heterogeneity transitions
+# ---------------------------------------------------------------------------
+
+
+def bursty_cpu_step(throttled, key, *, p_throttle: float, p_recover: float):
+    """Two-state (normal/throttled) Markov chain per client."""
+    u = jax.random.uniform(key, throttled.shape)
+    return jnp.where(throttled, u >= p_recover, u < p_throttle)
+
+
+def data_arrival_step(n_cur, n_base, key, *, phi: float, jitter: float):
+    """Mean-reverting AR(1) ``n' = base + phi (n - base) + jitter base eps``
+    clipped to [max(1, 0.2 base), 2 base] — time-varying local dataset
+    size around each client's base."""
+    eps = jax.random.normal(key, n_cur.shape)
+    n2 = n_base + phi * (n_cur - n_base) + jitter * n_base * eps
+    return jnp.clip(n2, jnp.maximum(0.2 * n_base, 1.0), 2.0 * n_base)

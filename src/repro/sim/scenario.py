@@ -1,0 +1,358 @@
+"""Scenario subsystem: dynamic wireless environments as pure state-transition
+functions fused into the batched Monte-Carlo engine.
+
+A scenario composes three orthogonal processes (``sim/processes.py``):
+channel (iid | ar1 fading, optional log-normal shadowing), mobility
+(fixed | waypoint | drift), and client heterogeneity (bursty CPU
+throttling, time-varying data arrival). ``Scenario.step(state, key)``
+returns ``(state', RoundEnvBatch)`` — the per-round ``(gains, n_samples,
+cpu_freq)`` batch the engine schedules — and is jit/vmap-able with the
+config baked in as a static argument, so
+``WirelessEngine.montecarlo_scenario`` advances the environment on device
+with no host-side R x S x N materialization (DESIGN.md section 6).
+
+``Scenario.rollout`` pre-generates the same env sequence (identical key
+schedule), which is the ``presampled=`` escape hatch ``run_montecarlo``
+uses for bit-for-bit fused-vs-presampled parity tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, NOMAConfig
+from repro.sim import processes as P
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """User-facing scenario description (see ``SCENARIOS`` for presets).
+
+    ``channel="iid"`` redraws ``|h|^2 ~ Exp(1)`` each round (the paper's
+    block fading); ``"ar1"`` evolves complex Gauss-Markov fading with
+    Jakes correlation ``rho = J0(2 pi doppler_hz slot_s)``. Shadowing is
+    enabled by ``shadow_sigma_db > 0`` and composes with either channel.
+    ``move_s`` is the mobility/shadowing timestep per FL round (seconds).
+    """
+    name: str = "static_iid"
+    # channel
+    channel: str = "iid"                 # iid | ar1
+    doppler_hz: float = 0.0              # f_d for the Jakes correlation
+    slot_s: float = 1e-3                 # coherence step T in rho=J0(2pi f T)
+    shadow_sigma_db: float = 0.0         # 0 = no shadowing
+    shadow_decorr_m: float = 50.0        # Gudmundson decorrelation distance
+    # mobility
+    mobility: str = "fixed"              # fixed | waypoint | drift
+    speed_mps: Tuple[float, float] = (0.0, 0.0)
+    move_s: float = 1.0                  # wall-clock advanced per round
+    # compute heterogeneity
+    compute: str = "static"              # static | bursty
+    throttle_factor: float = 0.4         # cpu multiplier while throttled
+    p_throttle: float = 0.05             # P(normal -> throttled) per round
+    p_recover: float = 0.25              # P(throttled -> normal) per round
+    # data arrival
+    data: str = "static"                 # static | dynamic
+    data_phi: float = 0.9                # AR(1) mean reversion
+    data_jitter: float = 0.1             # innovation std / base size
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioParams:
+    """Hashable scalars baked into the jitted init/step cores (the
+    scenario analogue of ``engine.EngineParams``)."""
+    channel: str
+    rho_fading: float
+    shadow_sigma_db: float
+    shadow_decorr_m: float
+    mobility: str
+    v_min: float
+    v_max: float
+    move_s: float
+    compute: str
+    throttle_factor: float
+    p_throttle: float
+    p_recover: float
+    data: str
+    data_phi: float
+    data_jitter: float
+    ref_path_loss: float
+    path_loss_exp: float
+    min_radius_m: float
+    cell_radius_m: float
+    cpu_lo: float
+    cpu_hi: float
+    ns_lo: float
+    ns_hi: float
+
+    @classmethod
+    def from_configs(cls, scfg: ScenarioConfig, ncfg: NOMAConfig,
+                     flcfg: FLConfig) -> "ScenarioParams":
+        if scfg.channel not in ("iid", "ar1"):
+            raise ValueError(f"unknown channel model {scfg.channel!r}")
+        if scfg.mobility not in ("fixed", "waypoint", "drift"):
+            raise ValueError(f"unknown mobility model {scfg.mobility!r}")
+        if scfg.compute not in ("static", "bursty"):
+            raise ValueError(f"unknown compute model {scfg.compute!r}")
+        if scfg.data not in ("static", "dynamic"):
+            raise ValueError(f"unknown data model {scfg.data!r}")
+        return cls(
+            channel=scfg.channel,
+            rho_fading=P.jakes_rho(scfg.doppler_hz, scfg.slot_s),
+            shadow_sigma_db=scfg.shadow_sigma_db,
+            shadow_decorr_m=scfg.shadow_decorr_m,
+            mobility=scfg.mobility,
+            v_min=scfg.speed_mps[0], v_max=scfg.speed_mps[1],
+            move_s=scfg.move_s,
+            compute=scfg.compute,
+            throttle_factor=scfg.throttle_factor,
+            p_throttle=scfg.p_throttle, p_recover=scfg.p_recover,
+            data=scfg.data,
+            data_phi=scfg.data_phi, data_jitter=scfg.data_jitter,
+            ref_path_loss=ncfg.ref_path_loss,
+            path_loss_exp=ncfg.path_loss_exp,
+            min_radius_m=ncfg.min_radius_m,
+            cell_radius_m=ncfg.cell_radius_m,
+            cpu_lo=flcfg.cpu_freq_range_ghz[0] * 1e9,
+            cpu_hi=flcfg.cpu_freq_range_ghz[1] * 1e9,
+            ns_lo=float(flcfg.samples_per_client[0]),
+            ns_hi=float(flcfg.samples_per_client[1]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# state / per-round env
+# ---------------------------------------------------------------------------
+
+
+class ScenarioState(NamedTuple):
+    """Pytree of the full environment state; every leaf's leading dims are
+    the batch shape (S, N). ``aux`` is the waypoint target (waypoint
+    mobility) or the velocity vector (drift); unused under fixed."""
+    pos: jax.Array          # (S, N, 2) m
+    aux: jax.Array          # (S, N, 2) m | m/s
+    speed: jax.Array        # (S, N) m/s
+    fading: jax.Array       # (S, N, 2) complex h as re/im (ar1 only)
+    shadow_db: jax.Array    # (S, N) dB
+    cpu_base: jax.Array     # (S, N) Hz
+    throttled: jax.Array    # (S, N) bool
+    n_base: jax.Array       # (S, N) samples
+    n_cur: jax.Array        # (S, N) samples
+
+
+class RoundEnvBatch(NamedTuple):
+    """What the engine schedules each round (all (S, N) f32); a stacked
+    (R, S, N) version is what ``rollout`` returns."""
+    gains: jax.Array
+    n_samples: jax.Array
+    cpu_freq: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# jitted cores
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("prm", "s", "n"))
+def _init_core(key, *, prm: ScenarioParams, s: int, n: int) -> ScenarioState:
+    k_pos, k_v, k_aux, k_fade, k_sh, k_cpu, k_ns = jax.random.split(key, 7)
+    shape = (s, n)
+    pos = P.annulus_positions(k_pos, shape, prm.min_radius_m,
+                              prm.cell_radius_m)
+    # speed only has meaning when clients move: under fixed mobility it is
+    # pinned to 0 so the Gudmundson shadowing correlation exp(-v T/d) is 1
+    # and shadowing stays at its init draw (matching the numpy twin)
+    if prm.mobility == "fixed":
+        speed = jnp.zeros(shape)
+    else:
+        speed = jax.random.uniform(k_v, shape, minval=prm.v_min,
+                                   maxval=prm.v_max)
+    if prm.mobility == "waypoint":
+        aux = P.annulus_positions(k_aux, shape, prm.min_radius_m,
+                                  prm.cell_radius_m)
+    elif prm.mobility == "drift":
+        th = jax.random.uniform(k_aux, shape, minval=0.0,
+                                maxval=2.0 * jnp.pi)
+        aux = speed[..., None] * jnp.stack([jnp.cos(th), jnp.sin(th)], -1)
+    else:
+        aux = jnp.zeros_like(pos)
+    fading = jax.random.normal(k_fade, shape + (2,)) * np.sqrt(0.5)
+    shadow = jax.random.normal(k_sh, shape) * prm.shadow_sigma_db
+    cpu = jax.random.uniform(k_cpu, shape, minval=prm.cpu_lo,
+                             maxval=prm.cpu_hi)
+    n_base = jax.random.uniform(k_ns, shape, minval=prm.ns_lo,
+                                maxval=prm.ns_hi)
+    return ScenarioState(pos=pos, aux=aux, speed=speed, fading=fading,
+                         shadow_db=shadow, cpu_base=cpu,
+                         throttled=jnp.zeros(shape, bool),
+                         n_base=n_base, n_cur=n_base)
+
+
+@functools.partial(jax.jit, static_argnames=("prm",))
+def _step_core(state: ScenarioState, key, *, prm: ScenarioParams):
+    k_fade, k_sh, k_mob, k_cpu, k_ns = jax.random.split(key, 5)
+
+    # mobility -> distances (the environment advances, then is observed)
+    pos, aux, speed = state.pos, state.aux, state.speed
+    if prm.mobility == "waypoint":
+        pos, aux, speed = P.waypoint_step(
+            pos, aux, speed, k_mob, move_s=prm.move_s,
+            r_min=prm.min_radius_m, r_max=prm.cell_radius_m,
+            v_min=prm.v_min, v_max=prm.v_max)
+    elif prm.mobility == "drift":
+        pos, aux = P.drift_step(pos, aux, move_s=prm.move_s,
+                                r_max=prm.cell_radius_m)
+    dist = P.distances_of(pos, prm.min_radius_m)
+
+    # channel: fading x path loss x (optional) shadowing
+    if prm.channel == "ar1":
+        fading, fpow = P.ar1_fading_step(state.fading, k_fade,
+                                         rho=prm.rho_fading)
+    else:
+        fading = state.fading
+        fpow = P.iid_fading_pow(k_fade, dist.shape)
+    gains = prm.ref_path_loss * dist ** (-prm.path_loss_exp) * fpow
+    shadow = state.shadow_db
+    if prm.shadow_sigma_db > 0.0:
+        shadow = P.shadow_step(shadow, speed, k_sh,
+                               sigma_db=prm.shadow_sigma_db,
+                               move_s=prm.move_s,
+                               decorr_m=prm.shadow_decorr_m)
+        gains = gains * 10.0 ** (shadow / 10.0)
+
+    # compute heterogeneity
+    throttled = state.throttled
+    cpu = state.cpu_base
+    if prm.compute == "bursty":
+        throttled = P.bursty_cpu_step(throttled, k_cpu,
+                                      p_throttle=prm.p_throttle,
+                                      p_recover=prm.p_recover)
+        cpu = cpu * jnp.where(throttled, prm.throttle_factor, 1.0)
+
+    # data arrival
+    n_cur = state.n_cur
+    if prm.data == "dynamic":
+        n_cur = P.data_arrival_step(n_cur, state.n_base, k_ns,
+                                    phi=prm.data_phi,
+                                    jitter=prm.data_jitter)
+
+    new = ScenarioState(pos=pos, aux=aux, speed=speed, fading=fading,
+                        shadow_db=shadow, cpu_base=state.cpu_base,
+                        throttled=throttled, n_base=state.n_base,
+                        n_cur=n_cur)
+    env = RoundEnvBatch(gains=gains.astype(jnp.float32),
+                        n_samples=n_cur.astype(jnp.float32),
+                        cpu_freq=cpu.astype(jnp.float32))
+    return new, env
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+
+class Scenario:
+    """Bound (ScenarioConfig, NOMAConfig, FLConfig) triple with jitted
+    ``init``/``step`` and the shared per-round key schedule. Duck-typed by
+    ``WirelessEngine.montecarlo_scenario`` (the engine never imports sim —
+    the scenario layer sits between configs and the engine)."""
+
+    def __init__(self, scfg: ScenarioConfig, ncfg: NOMAConfig,
+                 flcfg: FLConfig):
+        self.cfg = scfg
+        self.prm = ScenarioParams.from_configs(scfg, ncfg, flcfg)
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    def init(self, key, shape: Tuple[int, int]) -> ScenarioState:
+        s, n = shape
+        return _init_core(key, prm=self.prm, s=s, n=n)
+
+    def step(self, state: ScenarioState, key):
+        return _step_core(state, key, prm=self.prm)
+
+    def init_and_keys(self, key, rounds: int, shape: Tuple[int, int]):
+        """The ONE key schedule shared by the fused engine loop and
+        ``rollout`` — both paths see bit-identical env sequences."""
+        k_init, k_roll = jax.random.split(key)
+        return self.init(k_init, shape), jax.random.split(k_roll, rounds)
+
+    def first_env(self, key, rounds: int, shape) -> RoundEnvBatch:
+        """Round-0 env under the same key schedule as a ``rounds``-long
+        run (used for budget auto-calibration)."""
+        state, keys = self.init_and_keys(key, rounds, shape)
+        return self.step(state, keys[0])[1]
+
+    def rollout(self, key, rounds: int, shape) -> RoundEnvBatch:
+        """Pre-generate the full (R, S, N) env sequence — the
+        ``presampled=`` escape hatch. Key schedule identical to the fused
+        path, so feeding these arrays back through
+        ``WirelessEngine.montecarlo_rounds`` reproduces it bit-for-bit."""
+        state, keys = self.init_and_keys(key, rounds, shape)
+        envs = []
+        for i in range(rounds):
+            state, env = self.step(state, keys[i])
+            envs.append(env)
+        return RoundEnvBatch(*(jnp.stack(x) for x in zip(*envs)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+SCENARIOS: dict[str, ScenarioConfig] = {
+    # today's behavior: static topology, i.i.d. block fading, static compute
+    "static_iid": ScenarioConfig(name="static_iid"),
+    # walking users: slow waypoint mobility, highly correlated fading,
+    # moderate shadowing with a short decorrelation distance
+    "pedestrian": ScenarioConfig(
+        name="pedestrian", channel="ar1", doppler_hz=10.0, slot_s=1e-3,
+        shadow_sigma_db=4.0, shadow_decorr_m=25.0,
+        mobility="waypoint", speed_mps=(0.5, 1.5)),
+    # vehicles: fast drift across the cell, weakly correlated fading
+    # (rho = J0(2 pi 200 Hz 1 ms) ~ 0.64), heavier shadowing
+    "vehicular": ScenarioConfig(
+        name="vehicular", channel="ar1", doppler_hz=200.0, slot_s=1e-3,
+        shadow_sigma_db=6.0, shadow_decorr_m=50.0,
+        mobility="drift", speed_mps=(10.0, 30.0)),
+    # static sensors with duty-cycled CPUs and bursty data arrival
+    "iot_bursty": ScenarioConfig(
+        name="iot_bursty", compute="bursty", throttle_factor=0.35,
+        p_throttle=0.08, p_recover=0.3,
+        data="dynamic", data_phi=0.85, data_jitter=0.15),
+    # dense indoor hotspot: near-static users behind heavy, slowly
+    # decorrelating shadowing
+    "hotspot_shadowed": ScenarioConfig(
+        name="hotspot_shadowed", channel="ar1", doppler_hz=3.0, slot_s=1e-3,
+        shadow_sigma_db=8.0, shadow_decorr_m=20.0,
+        mobility="waypoint", speed_mps=(0.1, 0.5)),
+}
+
+
+def get_scenario_config(name: str) -> ScenarioConfig:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r} "
+                         f"(registered: {sorted(SCENARIOS)})") from None
+
+
+def as_scenario(spec: Union[str, ScenarioConfig, Scenario],
+                ncfg: NOMAConfig, flcfg: FLConfig) -> Scenario:
+    """Resolve a registry name / config / ready scenario to a Scenario."""
+    if isinstance(spec, Scenario):
+        return spec
+    if isinstance(spec, str):
+        spec = get_scenario_config(spec)
+    return Scenario(spec, ncfg, flcfg)
