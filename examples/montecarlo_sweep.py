@@ -57,6 +57,9 @@ def main():
     ap.add_argument("--vs", default=None, metavar="SCENARIO2",
                     help="paired second scenario (same seed) for an "
                          "age-advantage comparison, e.g. vehicular")
+    ap.add_argument("--pairing", default="strong_weak",
+                    help="subchannel pairing policy: strong_weak | "
+                         "adjacent | hungarian | greedy_matching")
     args = ap.parse_args()
 
     from repro.configs import FLConfig, NOMAConfig
@@ -67,7 +70,7 @@ def main():
             NOMAConfig(n_subchannels=5), FLConfig(),
             n_clients=args.clients, n_seeds=args.seeds, rounds=args.rounds,
             policies=POLICIES, model_bits=1e6, t_budget=args.budget,
-            seed=0, scenario=scenario)
+            seed=0, scenario=scenario, pairing=args.pairing)
 
     outs = {args.scenario: sweep(args.scenario)}
     if args.vs:

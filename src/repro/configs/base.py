@@ -231,6 +231,14 @@ class FLConfig:
                                      # core.engine path for the age policies)
     engine_pallas: bool = False      # jax engine: score rates with the
                                      # kernels/pairscore.py Pallas kernel
+    # subchannel pairing policy (core/pairing.py, DESIGN.md section 7):
+    #   strong_weak     i-th strongest with i-th weakest (paper heuristic)
+    #   adjacent        neighbouring sorted gains (NOMA worst-case ablation)
+    #   hungarian       min-sum assignment on the pair completion-time table
+    #                   (never slower than strong_weak by construction)
+    #   greedy_matching greedy max-score pairs on the effective-power
+    #                   score table (precision-stable min-rate surrogate)
+    pairing: str = "strong_weak"
     # wireless environment dynamics (repro.sim registry: static_iid |
     # pedestrian | vehicular | iot_bursty | hotspot_shadowed)
     scenario: str = "static_iid"

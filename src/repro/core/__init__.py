@@ -4,13 +4,22 @@ resource allocation for communication-efficient federated learning.
 Host-side (numpy) scheduler; the device mesh consumes only the resulting
 (selection mask, aggregation weights) — see repro.fl.server.
 """
-from repro.core import aoi, engine, noma, roundtime, scheduler  # noqa: F401
+from repro.core import (  # noqa: F401
+    aoi,
+    engine,
+    matching,
+    noma,
+    pairing,
+    roundtime,
+    scheduler,
+)
 from repro.core.engine import (  # noqa: F401
     EngineParams,
     EngineSchedule,
     WirelessEngine,
     engine_schedule_to_numpy,
 )
+from repro.core.pairing import PAIRINGS, pair_candidates  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
     RoundEnv,
     Schedule,

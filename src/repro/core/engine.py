@@ -15,7 +15,12 @@ one XLA call instead of a Python loop (DESIGN.md section 5):
                                 of ``order[slots:]`` always takes the next
                                 never-admitted client, so a cursor is exact);
   * candidate-rate scoring   -> ``kernels/pairscore.py`` (Pallas path) or
-                                its XLA twin — identical math either way.
+                                its XLA twin — identical math either way;
+  * subchannel pairing       -> ``FLConfig.pairing`` policy: strong_weak /
+                                adjacent as index math, hungarian /
+                                greedy_matching via the batched assignment
+                                solvers in ``core/matching.py`` over the
+                                pair score tables (DESIGN.md section 7).
 
 Precision: the engine runs fp32 on device while the reference is fp64 numpy.
 The power-allocation root uses the cancellation-free conjugate form and
@@ -34,6 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig, NOMAConfig
+from repro.core import matching
+from repro.core.pairing import ENUM_MAX_PAIRS, PAIRINGS, enumerate_matchings
 from repro.core.scheduler import RoundEnv, Schedule
 from repro.kernels import pairscore
 
@@ -185,14 +192,18 @@ def _lower_bound(a, targets, lo=None, hi=None, width=None):
     return lo
 
 
-def _kth_of_two_sorted_desc(a, b, k: int):
+def _kth_of_two_sorted_desc(a, b, k):
     """Exact k-th largest (1-based) of the union of two descending-sorted
     rows ``a`` (…, na) and ``b`` (…, nb): merge-path binary search on tiny
-    (…, 1) queries instead of sorting the concatenation."""
+    (…, 1) queries instead of sorting the concatenation. ``k`` is a static
+    int or a traced (…, 1) int array (per-batch query — the selection
+    tiebreak's need-th-largest-gain pass)."""
     na, nb = a.shape[-1], b.shape[-1]
     inf = jnp.inf
-    lo = jnp.full(a.shape[:-1] + (1,), max(0, k - nb), jnp.int32)
-    hi = jnp.full(a.shape[:-1] + (1,), min(k, na), jnp.int32)
+    k = jnp.asarray(k, jnp.int32)
+    shp = a.shape[:-1] + (1,)
+    lo = jnp.broadcast_to(jnp.maximum(0, k - nb), shp).astype(jnp.int32)
+    hi = jnp.broadcast_to(jnp.minimum(k, na), shp).astype(jnp.int32)
     for _ in range(int(max(na, 1)).bit_length() + 1):
         t = (lo + hi) // 2           # take t from a, k - t from b
         a_t = jnp.take_along_axis(a, jnp.clip(t, 0, na - 1), axis=-1)
@@ -244,7 +255,8 @@ def _lex_rank_desc(sorted_keys, sorted_idx, keys, idx):
 
 def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
                          prm: EngineParams, oma: bool, n_pairs: int,
-                         n_cand0: int) -> EngineSchedule:
+                         n_cand0: int, pairing_policy: str = "strong_weak"
+                         ) -> EngineSchedule:
     b, n = gains.shape
     n0b, pmax, bw = prm.noise_power_w, prm.max_power_w, prm.bandwidth_hz
     c = n_cand0
@@ -252,7 +264,7 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
     c_pair = c - odd
     m = c_pair // 2
 
-    # --- selection: top-c set by priority (ties broken by client index) ---
+    # --- selection: top-c set by (priority, gain, index) lexicographic ----
     # threshold = c-th largest priority; sorting two halves simultaneously
     # (28 vs 36 bitonic stages at n=256) + a merge-path k-th query is
     # cheaper than one full-width sort
@@ -264,8 +276,25 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
     gt = priority > thr
     eq = priority == thr
     n_gt = jnp.sum(gt, axis=1, keepdims=True)
-    eq_rank = jnp.cumsum(eq.astype(jnp.int32), axis=1)   # 1-based among ties
-    cand = gt | (eq & (eq_rank <= c - n_gt))             # exactly c members
+    # ties at the threshold priority resolve by gain (then client index):
+    # a second threshold pass over the tied clients' gains — the exact
+    # analogue of the numpy lexsort (scheduler.schedule_age_noma). Same
+    # two-half sort + merge-path k-th trick as the priority threshold
+    # (need >= 1 always: at most c-1 priorities exceed the c-th largest)
+    need = c - n_gt                                      # tied admissions
+    g_eq = jnp.where(eq, gains, -jnp.inf)
+    if n % 2 == 0 and c > 1:
+        g_halves = _bitonic_sort_desc(g_eq.reshape(b, 2, n // 2))
+        gthr = _kth_of_two_sorted_desc(g_halves[:, 0], g_halves[:, 1],
+                                       need)
+    else:
+        gthr = jnp.take_along_axis(_bitonic_sort_desc(g_eq),
+                                   jnp.clip(need - 1, 0, n - 1), axis=1)
+    ggt = eq & (gains > gthr)
+    geq = eq & (gains == gthr)
+    n_ggt = jnp.sum(ggt, axis=1, keepdims=True)
+    geq_rank = jnp.cumsum(geq.astype(jnp.int32), axis=1)  # 1-based ties
+    cand = gt | ggt | (geq & (geq_rank <= need - n_ggt))  # exactly c
 
     # --- compaction to (B, c) in client order (monotone cumsum + search) --
     cposc = jnp.cumsum(cand.astype(jnp.int32), axis=1)   # 1..c
@@ -282,16 +311,95 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
     # --- pairing: stable descending gain argsort of the candidates --------
     sg_c, sidx_c = _bitonic_argsort_desc(g_c)
     sid_c = jnp.take_along_axis(comp, sidx_c, axis=1)    # client id by rank
+    t_cmp_srt = jnp.take_along_axis(
+        jnp.take_along_axis(t_cmp, comp, axis=1), sidx_c, axis=1)
 
-    # --- rates/powers in SORTED space: rank p pairs with rank c_pair-1-p,
-    # so strong/weak gain vectors are pure slices and the pair math runs at
-    # half width (m pairs, each computed once) ----------------------------
-    g_str = sg_c[:, :m]
-    g_wk = jnp.flip(sg_c[:, m:c_pair], axis=1)
-    p_i, p_j, r_i, r_j = pairscore._pair_math(g_str, g_wk, n0b=n0b,
-                                              pmax=pmax, bw=bw, oma=oma)
-    rate_srt = jnp.concatenate([r_i, jnp.flip(r_j, axis=1)], axis=1)
-    pow_srt = jnp.concatenate([p_i, jnp.flip(p_j, axis=1)], axis=1)
+    # --- rates/powers in SORTED space under the pairing policy (DESIGN.md
+    # section 7). strong_weak keeps the original pure-slice construction
+    # (rank p pairs with rank c_pair-1-p, half-width pair math); adjacent
+    # is a stride-2 reshape; the matching policies solve an m x m
+    # assignment of the weak half to the strong half over the pair score /
+    # completion-time tables, then invert the resulting permutation with
+    # one (short) bitonic argsort ------------------------------------------
+    if pairing_policy == "strong_weak" or m == 0:
+        g_str = sg_c[:, :m]
+        g_wk = jnp.flip(sg_c[:, m:c_pair], axis=1)
+        p_i, p_j, r_i, r_j = pairscore._pair_math(g_str, g_wk, n0b=n0b,
+                                                  pmax=pmax, bw=bw, oma=oma)
+        rate_srt = jnp.concatenate([r_i, jnp.flip(r_j, axis=1)], axis=1)
+        pow_srt = jnp.concatenate([p_i, jnp.flip(p_j, axis=1)], axis=1)
+        strong_tab = sid_c[:, :m]
+        weak_tab = jnp.flip(sid_c[:, m:c_pair], axis=1)
+    elif pairing_policy == "adjacent":
+        g_str = sg_c[:, 0:c_pair:2]
+        g_wk = sg_c[:, 1:c_pair:2]
+        p_i, p_j, r_i, r_j = pairscore._pair_math(g_str, g_wk, n0b=n0b,
+                                                  pmax=pmax, bw=bw, oma=oma)
+        rate_srt = jnp.stack([r_i, r_j], axis=-1).reshape(b, c_pair)
+        pow_srt = jnp.stack([p_i, p_j], axis=-1).reshape(b, c_pair)
+        strong_tab = sid_c[:, 0:c_pair:2]
+        weak_tab = sid_c[:, 1:c_pair:2]
+    elif pairing_policy in ("hungarian", "greedy_matching"):
+        ar_m = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (b, m))
+        if pairing_policy == "greedy_matching":
+            # effective-power surrogate: precision-exact structural ties
+            # (greedy's argmax must break them like the fp64 reference)
+            score = pairscore.effective_power_table(
+                sg_c[:, :m], sg_c[:, m:c_pair], n0b=n0b, pmax=pmax)
+            strong_pos = ar_m
+            weak_pos = m + matching.greedy_assignment(score)
+        else:
+            # full sorted-rank completion table: the [0:m, m:] half-split
+            # slice is the assignment cost, the whole table feeds the
+            # bottleneck 2-opt + the never-slower guard (DESIGN.md 7.2)
+            ri_f, rj_f = pairscore.pair_rate_tables(
+                sg_c[:, :c_pair], sg_c[:, :c_pair], n0b=n0b, pmax=pmax,
+                bw=bw, oma=oma)
+            mb3 = model_bits[:, None, None]
+            tcp = t_cmp_srt[:, :c_pair]
+            table = jnp.maximum(
+                tcp[:, :, None] + mb3 / jnp.maximum(ri_f, 1e-9),
+                tcp[:, None, :] + mb3 / jnp.maximum(rj_f, 1e-9))
+            rev = jnp.broadcast_to(
+                jnp.arange(c_pair - 1, m - 1, -1, dtype=jnp.int32), (b, m))
+            if m <= ENUM_MAX_PAIRS:
+                # exact bottleneck by enumeration (L = 1/3/15/105)
+                mt = jnp.asarray(enumerate_matchings(m), jnp.int32)
+                vals = table[:, mt[:, :, 0], mt[:, :, 1]]     # (B, L, m)
+                best = jnp.argmin(jnp.max(vals, axis=2), axis=1)
+                a_p = jnp.take(mt[:, :, 0], best, axis=0)
+                b_p = jnp.take(mt[:, :, 1], best, axis=0)
+            else:
+                # min-sum assignment init + multi-start bottleneck 2-opt
+                sigma = matching.hungarian_assignment(
+                    table[:, :m, m:c_pair])
+                adj = jnp.broadcast_to(
+                    2 * jnp.arange(m, dtype=jnp.int32), (b, m))
+                a_p, b_p = matching.best_bottleneck_matching(
+                    table, ((ar_m, m + sigma), (ar_m, rev),
+                            (adj, adj + 1)))
+            # never-slower guard vs strong_weak
+            use = (matching.pair_bottleneck(table, a_p, b_p)
+                   < matching.pair_bottleneck(table, ar_m, rev))[:, None]
+            strong_pos = jnp.where(use, a_p, ar_m)
+            weak_pos = jnp.where(use, b_p, rev)
+        g_str = jnp.take_along_axis(sg_c, strong_pos, axis=1)
+        g_wk = jnp.take_along_axis(sg_c, weak_pos, axis=1)
+        p_i, p_j, r_i, r_j = pairscore._pair_math(g_str, g_wk, n0b=n0b,
+                                                  pmax=pmax, bw=bw, oma=oma)
+        # sorted-space inverse of [strong_pos | weak_pos] (a permutation of
+        # 0..c_pair-1): one short bitonic argsort ascending
+        pos = jnp.concatenate([strong_pos, weak_pos], axis=1)
+        _, inv = _bitonic_argsort_desc(-pos.astype(jnp.float32))
+        rate_srt = jnp.take_along_axis(
+            jnp.concatenate([r_i, r_j], axis=1), inv, axis=1)
+        pow_srt = jnp.take_along_axis(
+            jnp.concatenate([p_i, p_j], axis=1), inv, axis=1)
+        strong_tab = jnp.take_along_axis(sid_c, strong_pos, axis=1)
+        weak_tab = jnp.take_along_axis(sid_c, weak_pos, axis=1)
+    else:
+        raise ValueError(f"unknown pairing policy {pairing_policy!r} "
+                         f"(expected one of {PAIRINGS})")
     if odd:
         solo_r = pairscore.solo_rate_math(sg_c[:, c - 1:c], n0b=n0b,
                                           pmax=pmax, bw=bw)
@@ -302,8 +410,6 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
     # --- round time in sorted space (the compact slots ARE the selected
     # set). A consumer that only reads t_round/selected — the Monte-Carlo
     # sweep — lets XLA prune the rank inverse + client-space gathers below.
-    t_cmp_srt = jnp.take_along_axis(
-        jnp.take_along_axis(t_cmp, comp, axis=1), sidx_c, axis=1)
     tot_srt = t_cmp_srt + model_bits[:, None] / jnp.maximum(rate_srt, 1e-9)
     t_round = jnp.max(tot_srt, axis=1)
 
@@ -320,9 +426,7 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
     w = n_samples * cand
     w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
 
-    # --- pair table: pure slices of the rank-ordered client ids -----------
-    strong_tab = sid_c[:, :m]
-    weak_tab = jnp.flip(sid_c[:, m:c_pair], axis=1)
+    # --- pair table: solo row + padding on the policy's (strong, weak) ids
     if odd:
         strong_tab = jnp.concatenate([strong_tab, sid_c[:, c - 1:c]], axis=1)
         weak_tab = jnp.concatenate(
@@ -341,20 +445,26 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("prm", "oma", "n_pairs", "n_cand0"))
+                   static_argnames=("prm", "oma", "n_pairs", "n_cand0",
+                                    "pairing"))
 def _fast_schedule_batch_core(priority, gains, t_cmp, n_samples, model_bits,
                               *, prm: EngineParams, oma: bool, n_pairs: int,
-                              n_cand0: int) -> EngineSchedule:
+                              n_cand0: int, pairing: str = "strong_weak"
+                              ) -> EngineSchedule:
     return _fast_schedule_batch(priority, gains, t_cmp, n_samples,
-                                model_bits, prm, oma, n_pairs, n_cand0)
+                                model_bits, prm, oma, n_pairs, n_cand0,
+                                pairing)
 
 
 def _age_priority(ages, n_samples, gains, gamma: float):
-    """The paper's selection key A^gamma * w + epsilon-gain tiebreak —
-    single definition shared by every engine entry point (batched over any
-    leading dims)."""
+    """The paper's selection key A^gamma * w — single definition shared by
+    every engine entry point (batched over any leading dims). Ties resolve
+    lexicographically by gain inside the selection cores (the old
+    ``+ 1e-12 * gains`` epsilon was vacuous in fp32: gains ~1e-10 made the
+    increment ~1e-22, absorbed next to O(0.01-1) priorities)."""
+    del gains  # tiebreak handled lexicographically by the selection cores
     w = n_samples / jnp.sum(n_samples, axis=-1, keepdims=True)
-    return ages.astype(jnp.float32) ** gamma * w + 1e-12 * gains
+    return ages.astype(jnp.float32) ** gamma * w
 
 
 def round_robin_priority(round_idx, n: int, n_window: int):
@@ -374,16 +484,19 @@ def _compute_times(prm: EngineParams, n_samples, cpu_freq):
 
 
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "oma",
-                                             "n_pairs", "n_cand0"))
+                                             "n_pairs", "n_cand0",
+                                             "pairing"))
 def _fast_from_env_core(gains, n_samples, cpu_freq, ages, model_bits, *,
                         prm: EngineParams, gamma: float, oma: bool,
-                        n_pairs: int, n_cand0: int) -> EngineSchedule:
+                        n_pairs: int, n_cand0: int,
+                        pairing: str = "strong_weak") -> EngineSchedule:
     """Age-priority preamble fused with the fast path: one dispatch per
     batch (the eager preamble otherwise costs several ms on CPU)."""
     priority = _age_priority(ages, n_samples, gains, gamma)
     t_cmp = _compute_times(prm, n_samples, cpu_freq)
     return _fast_schedule_batch(priority, gains, t_cmp, n_samples,
-                                model_bits, prm, oma, n_pairs, n_cand0)
+                                model_bits, prm, oma, n_pairs, n_cand0,
+                                pairing)
 
 
 # ---------------------------------------------------------------------------
@@ -391,13 +504,17 @@ def _fast_from_env_core(gains, n_samples, cpu_freq, ages, model_bits, *,
 # ---------------------------------------------------------------------------
 
 
-def _assemble(cand, gains, prm: EngineParams, oma: bool, n_pairs: int):
-    """Pair the candidate mask, allocate power, scatter rates/powers.
+def _assemble(cand, gains, t_cmp, model_bits, prm: EngineParams, oma: bool,
+              n_pairs: int, pairing_policy: str = "strong_weak"):
+    """Pair the candidate mask under ``pairing_policy``, allocate power,
+    scatter rates/powers.
 
     Mirrors ``scheduler._rates_for``: sort candidates by gain (descending,
-    non-candidates pushed past the end with -inf keys), pair the i-th
-    strongest with the i-th weakest; an odd count parks the weakest on a
-    solo subchannel at full power.
+    non-candidates pushed past the end with -inf keys), pair them per the
+    policy (core/pairing.py is the fp64 reference); an odd count parks the
+    weakest on a solo subchannel at full power. The candidate count is
+    traced here (the budget-eviction loop shrinks it), so the matching
+    policies run on a ``pad_cost_table``-masked static (P, P) table.
     """
     n = gains.shape[0]
     n0b, pmax, bw = prm.noise_power_w, prm.max_power_w, prm.bandwidth_hz
@@ -411,8 +528,76 @@ def _assemble(cand, gains, prm: EngineParams, oma: bool, n_pairs: int):
 
     i = jnp.arange(n_pairs)
     valid = i < m
-    strong = jnp.where(valid, sidx[jnp.clip(i, 0, n - 1)], -1)
-    weak = jnp.where(valid, sidx[jnp.clip(c_pair - 1 - i, 0, n - 1)], -1)
+    if pairing_policy == "strong_weak":
+        strong_at = i
+        weak_at = c_pair - 1 - i
+    elif pairing_policy == "adjacent":
+        strong_at = 2 * i
+        weak_at = 2 * i + 1
+    elif pairing_policy == "greedy_matching":
+        g_s = gains[sidx[jnp.clip(i, 0, n - 1)]]           # strong half
+        g_w = gains[sidx[jnp.clip(m + i, 0, n - 1)]]       # weak half
+        score = jnp.where(valid[:, None] & valid[None, :],
+                          pairscore.effective_power_table(
+                              g_s, g_w, n0b=n0b, pmax=pmax), -1.0)
+        sigma = matching.greedy_assignment(score)
+        strong_at = i
+        weak_at = m + sigma
+    elif pairing_policy == "hungarian":
+        # full sorted-rank completion table at static size s2 (traced
+        # candidate count m; the [0:P, m:] slice is the assignment cost)
+        s2 = min(2 * n_pairs, n)
+        r2 = jnp.clip(jnp.arange(s2), 0, n - 1)
+        g_all = gains[sidx[r2]]
+        tc_all = t_cmp[sidx[r2]]
+        ri_f, rj_f = pairscore.pair_rate_tables(g_all, g_all, n0b=n0b,
+                                                pmax=pmax, bw=bw, oma=oma)
+        table = jnp.maximum(
+            tc_all[:, None] + model_bits / jnp.maximum(ri_f, 1e-9),
+            tc_all[None, :] + model_bits / jnp.maximum(rj_f, 1e-9))
+        ii = i.astype(jnp.int32)
+        rev = jnp.where(valid, c_pair - 1 - i, i).astype(jnp.int32)
+
+        # exact bottleneck enumeration lanes for tiny traced pair counts
+        # (the numpy reference applies the same runtime
+        # m <= ENUM_MAX_PAIRS rule)
+        a_p, b_p = ii, rev
+        for mm in range(1, min(ENUM_MAX_PAIRS, n_pairs) + 1):
+            if 2 * mm > s2:
+                continue
+            mt = jnp.asarray(enumerate_matchings(mm), jnp.int32)
+            vals = table[mt[:, :, 0], mt[:, :, 1]]           # (L, mm)
+            best = jnp.argmin(jnp.max(vals, axis=1))
+            am = jnp.concatenate(
+                [jnp.take(mt[:, :, 0], best, axis=0), ii[mm:]])
+            bm = jnp.concatenate(
+                [jnp.take(mt[:, :, 1], best, axis=0), ii[mm:]])
+            a_p = jnp.where(m == mm, am, a_p)
+            b_p = jnp.where(m == mm, bm, b_p)
+        if n_pairs > ENUM_MAX_PAIRS:
+            # larger instances: min-sum assignment + multi-start 2-opt
+            # (the same matching.best_bottleneck_matching pipeline the
+            # fast path runs, masked for the traced pair count)
+            cost = table[:n_pairs][:, jnp.clip(m + i, 0, s2 - 1)]
+            sigma = matching.hungarian_assignment(
+                matching.pad_cost_table(cost, m))
+            adj = 2 * ii
+            ah, bh = matching.best_bottleneck_matching(
+                table, ((ii, (m + sigma).astype(jnp.int32)), (ii, rev),
+                        (adj, adj + 1)), m_valid=m)
+            big = m > ENUM_MAX_PAIRS
+            a_p = jnp.where(big, ah, a_p)
+            b_p = jnp.where(big, bh, b_p)
+        # never-slower guard vs strong_weak
+        use = (matching.pair_bottleneck(table, a_p, b_p, m_valid=m)
+               < matching.pair_bottleneck(table, ii, rev, m_valid=m))
+        strong_at = jnp.where(use, a_p, i)
+        weak_at = jnp.where(use, b_p, rev)
+    else:
+        raise ValueError(f"unknown pairing policy {pairing_policy!r} "
+                         f"(expected one of {PAIRINGS})")
+    strong = jnp.where(valid, sidx[jnp.clip(strong_at, 0, n - 1)], -1)
+    weak = jnp.where(valid, sidx[jnp.clip(weak_at, 0, n - 1)], -1)
     g_i = gains[jnp.clip(strong, 0, n - 1)]
     g_j = gains[jnp.clip(weak, 0, n - 1)]
     p_i, p_j, r_i, r_j = pairscore._pair_math(g_i, g_j, n0b=n0b, pmax=pmax,
@@ -455,17 +640,20 @@ class _LoopState(NamedTuple):
 
 
 def _schedule_one(priority, gains, t_cmp, n_samples, model_bits, t_budget,
-                  prm: EngineParams, oma: bool, n_pairs: int, n_cand0: int):
-    """One env: top-``n_cand0`` admission by priority, then the budget
-    eviction/backfill do-while (``scheduler.schedule_age_noma``)."""
+                  prm: EngineParams, oma: bool, n_pairs: int, n_cand0: int,
+                  pairing: str = "strong_weak"):
+    """One env: top-``n_cand0`` admission by (priority, gain, index)
+    lexicographic rank, then the budget eviction/backfill do-while
+    (``scheduler.schedule_age_noma``)."""
     n = gains.shape[0]
     gains = gains.astype(jnp.float32)
-    order = jnp.argsort(-priority)
+    order = jnp.lexsort((jnp.arange(n), -gains, -priority))
     cand0 = jnp.zeros(n, bool).at[order[:n_cand0]].set(True)
 
     def sched_of(cand):
-        strong, weak, rates, powers = _assemble(cand, gains, prm, oma,
-                                                n_pairs)
+        strong, weak, rates, powers = _assemble(cand, gains, t_cmp,
+                                                model_bits, prm, oma,
+                                                n_pairs, pairing)
         t_com = model_bits / jnp.maximum(rates, 1e-9)
         tot = jnp.where(cand, t_cmp + t_com, 0.0)
         t_round = jnp.max(tot)
@@ -508,12 +696,14 @@ def _schedule_one(priority, gains, t_cmp, n_samples, model_bits, t_budget,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("prm", "oma", "n_pairs", "n_cand0"))
+                   static_argnames=("prm", "oma", "n_pairs", "n_cand0",
+                                    "pairing"))
 def _schedule_batch_core(priority, gains, t_cmp, n_samples, model_bits,
                          t_budget, *, prm: EngineParams, oma: bool,
-                         n_pairs: int, n_cand0: int) -> EngineSchedule:
+                         n_pairs: int, n_cand0: int,
+                         pairing: str = "strong_weak") -> EngineSchedule:
     fn = functools.partial(_schedule_one, prm=prm, oma=oma, n_pairs=n_pairs,
-                           n_cand0=n_cand0)
+                           n_cand0=n_cand0, pairing=pairing)
     return jax.vmap(fn)(priority, gains, t_cmp, n_samples, model_bits,
                         t_budget)
 
@@ -568,10 +758,15 @@ class WirelessEngine:
 
     def __init__(self, ncfg: NOMAConfig, flcfg: FLConfig, *,
                  use_pallas: bool = False,
-                 pallas_impl: Optional[str] = None):
+                 pallas_impl: Optional[str] = None,
+                 pairing: Optional[str] = None):
         self.ncfg = ncfg
         self.flcfg = flcfg
         self.prm = EngineParams.from_configs(ncfg, flcfg)
+        self.pairing = flcfg.pairing if pairing is None else pairing
+        if self.pairing not in PAIRINGS:
+            raise ValueError(f"unknown pairing policy {self.pairing!r} "
+                             f"(expected one of {PAIRINGS})")
         self.use_pallas = use_pallas
         if pallas_impl is None:
             pallas_impl = ("pallas" if jax.default_backend() == "tpu"
@@ -581,8 +776,9 @@ class WirelessEngine:
     # -- env building ------------------------------------------------------
 
     def age_priority(self, ages, n_samples, gains):
-        """The paper's selection key  A^gamma * w  (+ epsilon gain
-        tiebreak), matching ``schedule_age_noma``. Works batched."""
+        """The paper's selection key  A^gamma * w  (ties resolve by gain
+        then client index inside the cores), matching
+        ``schedule_age_noma``. Works batched."""
         return _age_priority(ages, n_samples, gains,
                              self.flcfg.age_exponent)
 
@@ -608,11 +804,14 @@ class WirelessEngine:
 
     def schedule_batch(self, gains, n_samples, cpu_freq, ages, model_bits,
                        *, t_budget=0.0, oma: bool = False,
-                       priority=None, shard: bool = False) -> EngineSchedule:
+                       priority=None, shard: bool = False,
+                       pairing: Optional[str] = None) -> EngineSchedule:
         """Vmapped joint round over a batch of envs.
 
         gains/n_samples/cpu_freq/ages: (B, N); model_bits/t_budget: scalar
         or (B,). ``priority=None`` uses the paper's age priority.
+        ``pairing`` overrides the engine's subchannel pairing policy
+        (``FLConfig.pairing``; core/pairing.py).
 
         When ``t_budget`` is a plain scalar <= 0 (no budget, the Monte-Carlo
         default) the admission count is static and the scatter/sort-free
@@ -644,6 +843,7 @@ class WirelessEngine:
                 if priority is not None:
                     priority = jax.device_put(
                         jnp.asarray(priority, jnp.float32), sh)
+        pairing = self.pairing if pairing is None else pairing
         no_budget = (isinstance(t_budget, (int, float))
                      and float(t_budget) <= 0.0)
         if no_budget and priority is None:
@@ -651,14 +851,14 @@ class WirelessEngine:
             out = _fast_from_env_core(
                 gains, n_samples, jnp.asarray(cpu_freq, jnp.float32), ages,
                 model_bits, prm=self.prm, gamma=self.flcfg.age_exponent,
-                oma=oma, n_pairs=n_pairs, n_cand0=n_cand0)
+                oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing)
         elif no_budget:
             priority = jnp.asarray(priority, jnp.float32)
             t_cmp = self.compute_times(n_samples,
                                        jnp.asarray(cpu_freq, jnp.float32))
             out = _fast_schedule_batch_core(
                 priority, gains, t_cmp, n_samples, model_bits, prm=self.prm,
-                oma=oma, n_pairs=n_pairs, n_cand0=n_cand0)
+                oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing)
         else:
             if priority is None:
                 priority = self.age_priority(ages, n_samples, gains)
@@ -669,7 +869,8 @@ class WirelessEngine:
                                         (b,))
             out = _schedule_batch_core(
                 priority, gains, t_cmp, n_samples, model_bits, t_budget,
-                prm=self.prm, oma=oma, n_pairs=n_pairs, n_cand0=n_cand0)
+                prm=self.prm, oma=oma, n_pairs=n_pairs, n_cand0=n_cand0,
+                pairing=pairing)
         if self.use_pallas:
             out = self._rescore(out, gains, model_bits, oma)
         return out
@@ -681,7 +882,8 @@ class WirelessEngine:
 
     def schedule(self, env: RoundEnv, *, t_budget: Optional[float] = None,
                  oma: bool = False, priority=None,
-                 policy: str = "age_noma") -> Schedule:
+                 policy: str = "age_noma",
+                 pairing: Optional[str] = None) -> Schedule:
         """Single-env convenience wrapper returning the numpy ``Schedule``
         (drop-in for ``schedule_age_noma``; used by ``FLServer``)."""
         if t_budget is None:
@@ -690,7 +892,7 @@ class WirelessEngine:
         out = self.schedule_batch(
             batchify(env.gains), batchify(env.n_samples),
             batchify(env.cpu_freq), batchify(env.ages), env.model_bits,
-            t_budget=t_budget, oma=oma,
+            t_budget=t_budget, oma=oma, pairing=pairing,
             priority=None if priority is None else batchify(priority))
         return engine_schedule_to_numpy(out, 0, info={
             "policy": policy, "engine": "jax",
@@ -701,7 +903,8 @@ class WirelessEngine:
 
     def montecarlo_rounds(self, gains_seq, n_samples, cpu_freq, model_bits,
                           *, policy: str = "age_noma", t_budget: float = 0.0,
-                          seed: int = 0, shard: bool = False):
+                          seed: int = 0, shard: bool = False,
+                          pairing: Optional[str] = None):
         """Roll the AoU state machine over R rounds for S seeds, one batched
         step per round: gains_seq (R, S, N); n_samples/cpu_freq either
         (S, N) static or (R, S, N) per-round (the scenario ``presampled=``
@@ -734,12 +937,13 @@ class WirelessEngine:
                     cpu_freq if cpu_freq.ndim == 2 else cpu_freq[i])
 
         return self._mc_loop(env_fn, r, model_bits, policy=policy,
-                             t_budget=t_budget, seed=seed)
+                             t_budget=t_budget, seed=seed, pairing=pairing)
 
     def montecarlo_scenario(self, scenario, *, rounds: int, n_seeds: int,
                             n_clients: int, model_bits,
                             policy: str = "age_noma", t_budget: float = 0.0,
-                            seed: int = 0, key=None, shard: bool = False):
+                            seed: int = 0, key=None, shard: bool = False,
+                            pairing: Optional[str] = None):
         """Fully fused Monte-Carlo: the scenario's ``step(state, key) ->
         (state, env)`` transition advances the wireless environment on
         device between scheduled rounds — no host-side R x S x N gains
@@ -773,15 +977,17 @@ class WirelessEngine:
             return env.gains, env.n_samples, env.cpu_freq
 
         return self._mc_loop(env_fn, rounds, model_bits, policy=policy,
-                             t_budget=t_budget, seed=seed)
+                             t_budget=t_budget, seed=seed, pairing=pairing)
 
     def _mc_loop(self, env_fn, rounds: int, model_bits, *, policy: str,
-                 t_budget: float, seed: int):
+                 t_budget: float, seed: int,
+                 pairing: Optional[str] = None):
         """R-round rollout: a Python loop of jitted per-round steps rather
         than ``lax.scan`` — on CPU the XLA while-loop runs the identical
         body ~1.7x slower than back-to-back jit dispatches. ``env_fn(i)``
         yields round i's (gains, n_samples, cpu_freq), either sliced from
         pre-sampled arrays or stepped out of a scenario state."""
+        pairing = self.pairing if pairing is None else pairing
         keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
         mb = jnp.asarray(model_bits, jnp.float32)
         ages = part = None
@@ -799,6 +1005,7 @@ class WirelessEngine:
                 jnp.asarray(i, jnp.int32),
                 prm=self.prm, gamma=self.flcfg.age_exponent, policy=policy,
                 t_budget=float(t_budget), n_pairs=n_pairs, n_cand0=n_cand0,
+                pairing=pairing,
                 pallas_impl=self.pallas_impl if self.use_pallas else None)
             t_rounds.append(t_round)
             n_sels.append(n_sel)
@@ -811,11 +1018,13 @@ class WirelessEngine:
 
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "policy",
                                              "t_budget", "n_pairs",
-                                             "n_cand0", "pallas_impl"))
+                                             "n_cand0", "pairing",
+                                             "pallas_impl"))
 def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
                      model_bits, round_idx, *, prm: EngineParams,
                      gamma: float, policy: str, t_budget: float,
                      n_pairs: int, n_cand0: int,
+                     pairing: str = "strong_weak",
                      pallas_impl: Optional[str] = None):
     """One Monte-Carlo round over all seeds; every policy in
     ``fl.rounds.POLICIES`` resolves to a priority vector here
@@ -839,11 +1048,12 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
         raise ValueError(f"unknown montecarlo policy {policy!r}")
     if t_budget <= 0.0:
         sched = _fast_schedule_batch(prio, gains, t_cmp, n_samples, mb,
-                                     prm, oma, n_pairs, n_cand0)
+                                     prm, oma, n_pairs, n_cand0, pairing)
     else:
         tb = jnp.full((s,), t_budget, jnp.float32)
         one = functools.partial(_schedule_one, prm=prm, oma=oma,
-                                n_pairs=n_pairs, n_cand0=n_cand0)
+                                n_pairs=n_pairs, n_cand0=n_cand0,
+                                pairing=pairing)
         sched = jax.vmap(one)(prio, gains, t_cmp, n_samples, mb, tb)
     if pallas_impl is not None:
         sched = _rescore_pallas(sched, gains, mb, oma, prm, pallas_impl)

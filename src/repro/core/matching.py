@@ -1,0 +1,253 @@
+"""Batched jit/vmap-able assignment solvers — the device twins of
+``core/pairing.py``'s fp64 reference solvers.
+
+``hungarian_assignment`` is a fixed-shape transcription of the shortest
+augmenting path algorithm (Jonker–Volgenant style duals): the outer row
+loop is a ``fori_loop``, the Dijkstra column scan and the alternating-path
+augmentation are ``while_loop``s over (m,) state, and everything batches
+with ``vmap``. Tie-breaks (``argmin``/``argmax`` take the first extremum)
+match the numpy reference exactly, so the two implementations produce the
+same assignment up to fp32-vs-fp64 cost rounding (DESIGN.md section 7.3).
+
+Dynamic-size instances (the engine's budget-eviction loop has a traced
+candidate count) are handled by padding the cost table to a static size
+with ``pad_cost_table``: valid-valid entries keep their cost, mixed
+valid/invalid entries get ``BIG`` and invalid-invalid entries 0, so the
+min-sum assignment matches valid rows to valid columns exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30   # >> any real completion time (<= ~1e16 s), << fp32 max
+
+
+class _Dijkstra(NamedTuple):
+    shortest: jax.Array   # (m,) tentative reduced path cost per column
+    path: jax.Array       # (m,) predecessor row per column
+    scanned_r: jax.Array  # (m,) bool
+    scanned_c: jax.Array  # (m,) bool
+    i: jax.Array          # current row
+    min_val: jax.Array    # cost of the best scanned column so far
+    sink: jax.Array       # first free column reached (-1 while searching)
+
+
+def _hungarian_one(cost: jax.Array) -> jax.Array:
+    """Single (m, m) instance -> ``col4row`` (m,) int32."""
+    m = cost.shape[0]
+    dt = cost.dtype
+    idx = jnp.arange(m, dtype=jnp.int32)
+
+    def assign_row(cur_row, carry):
+        u, v, col4row, row4col = carry
+        cur_row = jnp.asarray(cur_row, jnp.int32)
+
+        def scan_body(st: _Dijkstra) -> _Dijkstra:
+            scanned_r = st.scanned_r.at[st.i].set(True)
+            red = st.min_val + cost[st.i] - u[st.i] - v
+            upd = ~st.scanned_c & (red < st.shortest)
+            shortest = jnp.where(upd, red, st.shortest)
+            path = jnp.where(upd, st.i, st.path)
+            masked = jnp.where(st.scanned_c, jnp.inf, shortest)
+            j = jnp.argmin(masked).astype(jnp.int32)
+            min_val = masked[j]
+            scanned_c = st.scanned_c.at[j].set(True)
+            free = row4col[j] < 0
+            return _Dijkstra(shortest, path, scanned_r, scanned_c,
+                             jnp.where(free, st.i, row4col[j]), min_val,
+                             jnp.where(free, j, jnp.int32(-1)))
+
+        st = jax.lax.while_loop(
+            lambda s: s.sink < 0, scan_body,
+            _Dijkstra(jnp.full((m,), jnp.inf, dt),
+                      jnp.full((m,), -1, jnp.int32),
+                      jnp.zeros(m, bool), jnp.zeros(m, bool),
+                      cur_row, jnp.asarray(0.0, dt),
+                      jnp.asarray(-1, jnp.int32)))
+
+        # dual update (scanned rows other than cur_row are all assigned,
+        # so col4row is a valid index there; clip guards the masked lanes)
+        u = u.at[cur_row].add(st.min_val)
+        other = st.scanned_r & (idx != cur_row)
+        u = u + jnp.where(
+            other,
+            st.min_val - st.shortest[jnp.clip(col4row, 0, m - 1)], 0.0)
+        v = v - jnp.where(st.scanned_c, st.min_val - st.shortest, 0.0)
+
+        def aug_body(a):
+            col4row, row4col, j = a
+            i = st.path[j]
+            row4col = row4col.at[j].set(i)
+            nxt = jnp.where(i == cur_row, jnp.int32(-1), col4row[i])
+            return col4row.at[i].set(j), row4col, nxt
+
+        col4row, row4col, _ = jax.lax.while_loop(
+            lambda a: a[2] >= 0, aug_body, (col4row, row4col, st.sink))
+        return u, v, col4row, row4col
+
+    _, _, col4row, _ = jax.lax.fori_loop(
+        0, m, assign_row,
+        (jnp.zeros(m, dt), jnp.zeros(m, dt),
+         jnp.full(m, -1, jnp.int32), jnp.full(m, -1, jnp.int32)))
+    return col4row
+
+
+def _greedy_one(score: jax.Array) -> jax.Array:
+    """Greedy max-score matching on one (m, m) table -> col4row (m,)."""
+    m = score.shape[0]
+
+    def body(_, carry):
+        col4row, avail_r, avail_c = carry
+        masked = jnp.where(avail_r[:, None] & avail_c[None, :], score,
+                           -jnp.inf)
+        flat = jnp.argmax(masked).astype(jnp.int32)
+        p, j = flat // m, flat % m
+        return (col4row.at[p].set(j), avail_r.at[p].set(False),
+                avail_c.at[j].set(False))
+
+    col4row, _, _ = jax.lax.fori_loop(
+        0, m, body,
+        (jnp.full(m, -1, jnp.int32), jnp.ones(m, bool), jnp.ones(m, bool)))
+    return col4row
+
+
+def _batched(solver, table):
+    flat = table.reshape((-1,) + table.shape[-2:])
+    out = jax.vmap(solver)(flat)
+    return out.reshape(table.shape[:-1])
+
+
+@jax.jit
+def hungarian_assignment(cost: jax.Array) -> jax.Array:
+    """Min-sum assignment over (..., m, m) cost tables -> (..., m) int32
+    ``col4row`` per instance."""
+    return _batched(_hungarian_one, cost)
+
+
+@jax.jit
+def greedy_assignment(score: jax.Array) -> jax.Array:
+    """Greedy max-score matching over (..., m, m) -> (..., m) int32."""
+    return _batched(_greedy_one, score)
+
+
+def _gather2(table: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:
+    """table (..., c, c) indexed at (u, v) per batch element -> (...,)."""
+    row = jnp.take_along_axis(table, u[..., None, None], axis=-2)
+    return jnp.take_along_axis(row, v[..., None, None], axis=-1)[..., 0, 0]
+
+
+def _gather_pairs(table: jax.Array, rows: jax.Array,
+                  cols: jax.Array) -> jax.Array:
+    """table (..., c, c) at per-pair indices rows/cols (..., m) -> (..., m)
+    (clipped — padded pair rows gather garbage that callers mask)."""
+    c = table.shape[-1]
+    r = jnp.take_along_axis(table,
+                            jnp.clip(rows, 0, c - 1)[..., :, None], axis=-2)
+    return jnp.take_along_axis(r, jnp.clip(cols, 0, c - 1)[..., :, None],
+                               axis=-1)[..., 0]
+
+
+def pair_bottleneck(table: jax.Array, rows: jax.Array, cols: jax.Array,
+                    m_valid=None) -> jax.Array:
+    """Worst pair completion of the matching {(rows[k], cols[k])} — the
+    metric the hungarian policy's restarts and never-slower guard compare
+    on. ``m_valid`` masks padded trailing rows (budget path); an all-pad
+    matching scores -inf, so strict-< guards reject it."""
+    vals = _gather_pairs(table, rows, cols)
+    if m_valid is not None:
+        m = rows.shape[-1]
+        vals = jnp.where(jnp.arange(m) < jnp.asarray(m_valid)[..., None],
+                         vals, -jnp.inf)
+    return jnp.max(vals, axis=-1)
+
+
+def best_bottleneck_matching(table: jax.Array, inits, m_valid=None,
+                             sweeps: int = 2):
+    """Multi-start bottleneck 2-opt: refine each (a0, b0) init and keep
+    the matching with the smallest worst-pair completion (strict
+    improvement only, earliest init wins ties — identical to the numpy
+    reference loop in ``core.pairing.pair_candidates``). The single
+    hungarian pipeline both engine cores call."""
+    a_p = b_p = best_t = None
+    for a0, b0 in inits:
+        ca, cb = two_opt_refine(table, a0, b0, m_valid=m_valid,
+                                sweeps=sweeps)
+        t = pair_bottleneck(table, ca, cb, m_valid)
+        if a_p is None:
+            a_p, b_p, best_t = ca, cb, t
+        else:
+            better = (t < best_t)[..., None]
+            a_p = jnp.where(better, ca, a_p)
+            b_p = jnp.where(better, cb, b_p)
+            best_t = jnp.minimum(best_t, t)
+    return a_p, b_p
+
+
+def two_opt_refine(table: jax.Array, strong_pos: jax.Array,
+                   weak_pos: jax.Array, m_valid=None, sweeps: int = 2):
+    """Bottleneck 2-opt over the full (..., c, c) sorted-rank completion
+    table — the device twin of ``core.pairing.two_opt_refine`` (identical
+    sweep order and tie rules). For each pair of pairs the two
+    re-pairings are adopted only on a strict improvement of the max
+    completion. The (sweep, x, y) schedule is a static index table walked
+    by one ``fori_loop`` — unrolling it made the jaxpr ~90x larger at
+    m=10 and dominated compile time. ``m_valid`` (traced) gates the
+    updates when trailing rows are padding (the budget path)."""
+    m = strong_pos.shape[-1]
+    c = table.shape[-1]
+    a0 = strong_pos.astype(jnp.int32)
+    b0 = weak_pos.astype(jnp.int32)
+    xy = [(x, y) for x in range(m) for y in range(x + 1, m)]
+    if not xy:
+        return a0, b0
+    sched = jnp.asarray(xy * sweeps, jnp.int32)           # (K, 2)
+
+    def look(u, v):
+        return _gather2(table, jnp.clip(u, 0, c - 1), jnp.clip(v, 0, c - 1))
+
+    def body(k, ab):
+        a, b = ab
+        x, y = sched[k, 0], sched[k, 1]
+        ok = True if m_valid is None else y < m_valid
+        pa, pb = jnp.take(a, x, axis=-1), jnp.take(b, x, axis=-1)
+        qa, qb = jnp.take(a, y, axis=-1), jnp.take(b, y, axis=-1)
+        cur = jnp.maximum(look(pa, pb), look(qa, qb))
+        # option 1: (pa, qa) + (pb, qb); option 2: (pa, qb) + (pb, qa)
+        o1 = (jnp.minimum(pa, qa), jnp.maximum(pa, qa),
+              jnp.minimum(pb, qb), jnp.maximum(pb, qb))
+        o2 = (jnp.minimum(pa, qb), jnp.maximum(pa, qb),
+              jnp.minimum(pb, qa), jnp.maximum(pb, qa))
+        alt1 = jnp.maximum(look(o1[0], o1[1]), look(o1[2], o1[3]))
+        alt2 = jnp.maximum(look(o2[0], o2[1]), look(o2[2], o2[3]))
+        take1 = ok & (alt1 < cur) & (alt1 <= alt2)
+        take2 = ok & (alt2 < cur) & ~take1
+        pick = lambda v1, v2, cur_: jnp.where(
+            take1, v1, jnp.where(take2, v2, cur_))
+        a = a.at[..., x].set(pick(o1[0], o2[0], pa))
+        b = b.at[..., x].set(pick(o1[1], o2[1], pb))
+        a = a.at[..., y].set(pick(o1[2], o2[2], qa))
+        b = b.at[..., y].set(pick(o1[3], o2[3], qb))
+        return a, b
+
+    return jax.lax.fori_loop(0, sched.shape[0], body, (a0, b0))
+
+
+@functools.partial(jax.jit, static_argnames=("fill_invalid",))
+def pad_cost_table(cost: jax.Array, m_valid: jax.Array,
+                   fill_invalid: float = 0.0) -> jax.Array:
+    """Mask a fixed-shape (..., P, P) table for a traced valid size
+    ``m_valid`` (...,): rows/cols >= m_valid are invalid. Valid-invalid
+    entries get ``BIG`` so the min-sum assignment never mixes them;
+    invalid-invalid entries get ``fill_invalid``."""
+    p = cost.shape[-1]
+    i = jnp.arange(p, dtype=jnp.int32)
+    mv = jnp.asarray(m_valid, jnp.int32)[..., None]
+    vr = (i < mv)[..., :, None]
+    vc = (i < mv)[..., None, :]
+    return jnp.where(vr & vc, cost,
+                     jnp.where(vr ^ vc, jnp.asarray(BIG, cost.dtype),
+                               jnp.asarray(fill_invalid, cost.dtype)))

@@ -128,12 +128,20 @@ def pair_min_rate(g_i, g_j, cfg: NOMAConfig) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def pairing_order(gains: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Candidates sorted by (gain desc, client index asc) — the single
+    deterministic total order every pairing policy uses (it matches the
+    engine's bitonic argsort tie-breaks, see core/pairing.py)."""
+    idx = np.asarray(idx, dtype=int)
+    return idx[np.lexsort((idx, -gains[idx]))]
+
+
 def strong_weak_pairing(gains: np.ndarray, idx: np.ndarray
                         ) -> list[tuple[int, int]]:
     """Classic uplink-NOMA pairing: sort candidates by gain, pair the i-th
     strongest with the i-th weakest. ``idx`` are client indices (even count).
     Returns [(strong, weak), ...]."""
-    order = idx[np.argsort(-gains[idx])]
+    order = pairing_order(gains, idx)
     m = len(order) // 2
     return [(int(order[i]), int(order[-1 - i])) for i in range(m)]
 
@@ -142,6 +150,6 @@ def adjacent_pairing(gains: np.ndarray, idx: np.ndarray
                      ) -> list[tuple[int, int]]:
     """Alternative: pair adjacent sorted clients (worst case for NOMA —
     similar gains). Used by ablations."""
-    order = idx[np.argsort(-gains[idx])]
+    order = pairing_order(gains, idx)
     return [(int(order[2 * i]), int(order[2 * i + 1]))
             for i in range(len(order) // 2)]

@@ -2,9 +2,15 @@
 pairing + power allocation, with a round-time budget loop.
 
 Decomposition (DESIGN.md section 4):
-  1. rank clients by the age-utility  A_n^gamma * w_n;
+  1. rank clients by the age-utility  A_n^gamma * w_n, ties broken
+     lexicographically by channel gain then client index (np.lexsort — the
+     old epsilon-gain nudge ``prio + 1e-12 * g`` was numerically vacuous:
+     gains are ~1e-10, so the increment (~1e-22) vanished next to O(0.01–1)
+     priorities and ties silently resolved by argsort order);
   2. admit the top J*K candidates;
-  3. pair strong/weak channels per subchannel (strong_weak_pairing);
+  3. pair candidates per subchannel under ``FLConfig.pairing``
+     (core/pairing.py: strong_weak | adjacent | hungarian |
+     greedy_matching; DESIGN.md section 7);
   4. closed-form max-min power allocation per pair -> rates -> round time;
   5. if T_round exceeds the budget, evict the latency-critical client and
      re-pair (repeat).
@@ -21,7 +27,7 @@ from typing import Optional
 import numpy as np
 
 from repro.configs.base import FLConfig, NOMAConfig
-from repro.core import aoi, noma, roundtime
+from repro.core import aoi, noma, pairing, roundtime
 
 
 @dataclasses.dataclass
@@ -53,8 +59,11 @@ class Schedule:
 
 
 def _rates_for(cand: np.ndarray, env: RoundEnv, ncfg: NOMAConfig,
-               oma: bool = False):
-    """Pair candidates, allocate power, return (pairs, rates, powers)."""
+               oma: bool = False, *, pairing_policy: str = "strong_weak",
+               t_cmp: Optional[np.ndarray] = None):
+    """Pair candidates under ``pairing_policy`` (core/pairing.py), allocate
+    power, return (pairs, rates, powers). ``t_cmp`` feeds the hungarian
+    policy's completion-time cost table."""
     n = len(env.gains)
     rates = np.zeros(n)
     powers = np.zeros(n)
@@ -64,7 +73,10 @@ def _rates_for(cand: np.ndarray, env: RoundEnv, ncfg: NOMAConfig,
         # weakest-priority... give the weakest channel a solo subchannel
         solo = int(cand[np.argmin(env.gains[cand])])
         cand = cand[cand != solo]
-    pairs = noma.strong_weak_pairing(env.gains, cand)
+    pairs = pairing.pair_candidates(env.gains, cand, pairing_policy,
+                                    t_cmp=t_cmp,
+                                    model_bits=env.model_bits, ncfg=ncfg,
+                                    oma=oma)
     if pairs:
         gi = env.gains[[p[0] for p in pairs]]
         gj = env.gains[[p[1] for p in pairs]]
@@ -89,12 +101,14 @@ def _rates_for(cand: np.ndarray, env: RoundEnv, ncfg: NOMAConfig,
 def _finalize(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
               oma: bool, info: dict) -> Schedule:
     n = len(env.gains)
-    pairs, rates, powers = _rates_for(cand, env, ncfg, oma)
-    selected = np.zeros(n, dtype=bool)
-    selected[list(cand)] = True
     t_cmp = roundtime.compute_times(env.n_samples,
                                     flcfg.cpu_cycles_per_sample,
                                     env.cpu_freq, flcfg.local_epochs)
+    pairs, rates, powers = _rates_for(cand, env, ncfg, oma,
+                                      pairing_policy=flcfg.pairing,
+                                      t_cmp=t_cmp)
+    selected = np.zeros(n, dtype=bool)
+    selected[list(cand)] = True
     t_com = roundtime.comm_times(env.model_bits, rates)
     t_rd = roundtime.round_time(t_cmp, t_com, selected)
     w = env.n_samples.astype(np.float64) * selected
@@ -116,7 +130,11 @@ def schedule_age_noma(env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
     slots = ncfg.n_subchannels * ncfg.users_per_subchannel
     w = env.n_samples / env.n_samples.sum()
     prio = aoi.age_priority(env.ages, w, flcfg.age_exponent)
-    order = np.argsort(-(prio + 1e-12 * env.gains))  # gain tiebreak
+    # true lexicographic (priority desc, gain desc, index asc) ranking —
+    # the old ``prio + 1e-12 * gains`` epsilon was absorbed by float64
+    # rounding (gains ~1e-10 => increment ~1e-22 next to O(0.01-1)
+    # priorities), so ties actually resolved by argsort order
+    order = np.lexsort((np.arange(n), -env.gains, -prio))
     cand = list(order[:min(slots, n)])
 
     evicted = []
@@ -168,32 +186,24 @@ def schedule_round_robin(t: int, env: RoundEnv, ncfg: NOMAConfig,
 # ---------------------------------------------------------------------------
 
 
-def _all_pairings(items: list):
-    """Yield all perfect matchings of an even-sized list."""
-    if not items:
-        yield []
-        return
-    a = items[0]
-    for i in range(1, len(items)):
-        rest = items[1:i] + items[i + 1:]
-        for sub in _all_pairings(rest):
-            yield [(a, items[i])] + sub
-
-
 def exhaustive_pairing_reference(cand, env: RoundEnv, ncfg: NOMAConfig,
                                  flcfg: FLConfig) -> float:
     """Optimal round time over ALL pairings of the candidate set (per-pair
     power allocation stays closed-form max-min, which is optimal for a fixed
-    pair). Exponential — tests only (|cand| <= 8)."""
+    pair). Exponential — tests only (|cand| <= 8). The matching set comes
+    from ``pairing.enumerate_matchings`` — the same (single) generator the
+    hungarian policy's small-instance enumeration uses, so the two can
+    never disagree on coverage or order."""
     cand = list(int(c) for c in cand)
     assert len(cand) % 2 == 0 and len(cand) <= 8
     t_cmp = roundtime.compute_times(env.n_samples,
                                     flcfg.cpu_cycles_per_sample,
                                     env.cpu_freq, flcfg.local_epochs)
     best = np.inf
-    for pairing in _all_pairings(cand):
+    for rows in pairing.enumerate_matchings(len(cand) // 2):
         t_round = 0.0
-        for (a, b) in pairing:
+        for (ia, ib) in rows:
+            a, b = cand[ia], cand[ib]
             i, j = (a, b) if env.gains[a] >= env.gains[b] else (b, a)
             p_i, p_j = noma.pair_power_allocation(
                 env.gains[i:i + 1], env.gains[j:j + 1], ncfg)

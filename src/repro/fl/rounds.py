@@ -25,9 +25,10 @@ MC_POLICIES = POLICIES
 def run_experiment(model_cfg: ModelConfig, fl: FLConfig, nomacfg: NOMAConfig,
                    task: TaskConfig, policy: str, *, rounds=None,
                    verbose=False, seed=None, agg_impl="xla",
-                   predictor=None) -> History:
+                   predictor=None, pairing=None) -> History:
     server = FLServer(model_cfg, fl, nomacfg, task, policy=policy,
-                      seed=seed, agg_impl=agg_impl, predictor=predictor)
+                      seed=seed, agg_impl=agg_impl, predictor=predictor,
+                      pairing=pairing)
     return server.run(rounds, verbose=verbose)
 
 
@@ -66,7 +67,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
                    t_budget: float = 0.0, seed: int = 0,
                    use_pallas: bool = False,
                    scenario: str | object = "static_iid",
-                   presampled: bool = False, shard: bool = False) -> dict:
+                   presampled: bool = False, shard: bool = False,
+                   pairing: Optional[str] = None) -> dict:
     """Wireless-layer Monte-Carlo: compare selection/RA policies over
     ``n_seeds`` independent environment realizations x ``rounds``, one
     batched engine call per round.
@@ -96,7 +98,10 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
 
     nomacfg = nomacfg or NOMAConfig()
     flcfg = flcfg or FLConfig()
-    eng = WirelessEngine(nomacfg, flcfg, use_pallas=use_pallas)
+    # subchannel pairing policy: every POLICY x scenario sweep can run any
+    # pairing (core/pairing.py; threaded through the fused MC step)
+    eng = WirelessEngine(nomacfg, flcfg, use_pallas=use_pallas,
+                         pairing=pairing)
     scn = as_scenario(scenario, nomacfg, flcfg)
     s, n, r = n_seeds, n_clients, rounds
     k_env = jax.random.PRNGKey(seed)
@@ -115,7 +120,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
         "n_clients": n, "n_seeds": s, "rounds": r,
         "model_bits": model_bits, "t_budget": t_budget,
         "scenario": scn.name, "presampled": bool(presampled),
-        "slots": eng.prm.slots, "use_pallas": use_pallas}}
+        "slots": eng.prm.slots, "use_pallas": use_pallas,
+        "pairing": eng.pairing}}
     for policy in policies:
         tb = t_budget
         if policy == "age_noma_budget" and tb <= 0.0:

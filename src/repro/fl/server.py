@@ -89,7 +89,17 @@ class FLServer:
                  eval_every: int = 5, seed: Optional[int] = None,
                  predictor: Optional[str] = None,
                  engine: Optional[str] = None,
-                 scenario: Optional[str] = None):
+                 scenario: Optional[str] = None,
+                 pairing: Optional[str] = None):
+        # subchannel pairing policy (core/pairing.py): an explicit override
+        # rewrites the config so the numpy scheduler (_finalize reads
+        # fl.pairing) and the jax engine stay on the same policy
+        if pairing is not None:
+            fl = dataclasses.replace(fl, pairing=pairing)
+        from repro.core.pairing import PAIRINGS
+        if fl.pairing not in PAIRINGS:
+            raise ValueError(f"unknown pairing {fl.pairing!r} "
+                             f"(expected one of {PAIRINGS})")
         self.cfg = model_cfg
         self.fl = fl
         self.noma = nomacfg
@@ -105,7 +115,8 @@ class FLServer:
             raise ValueError(f"unknown engine {self.engine_mode!r} "
                              "(expected 'numpy' or 'jax')")
         self.engine = (WirelessEngine(nomacfg, fl,
-                                      use_pallas=fl.engine_pallas)
+                                      use_pallas=fl.engine_pallas,
+                                      pairing=fl.pairing)
                        if self.engine_mode == "jax" else None)
         seed = fl.seed if seed is None else seed
         self.rng = np.random.default_rng(seed + 10_000)

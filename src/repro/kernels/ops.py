@@ -57,9 +57,20 @@ def pair_alloc_rates(g_i, g_j, *, n0b: float, pmax: float, bw: float,
 
 def pair_score_matrix(g_strong, g_weak, *, n0b: float, pmax: float,
                       bw: float, impl: str = "xla"):
-    """(K, N) min-rate candidate scoring table (see kernels.pairscore)."""
+    """(..., K, N) min-rate candidate scoring table (see kernels.pairscore);
+    batches over shared leading dims — the pairing-policy score surface."""
     return _pairscore.pair_score_matrix(g_strong, g_weak, n0b=n0b,
                                         pmax=pmax, bw=bw, impl=impl)
+
+
+def pair_rate_tables(g_strong, g_weak, *, n0b: float, pmax: float,
+                     bw: float, oma: bool = False, impl: str = "xla"):
+    """(..., K, N) per-user SIC (or OMA-ablation) rate tables (r_i, r_j)
+    for the matching policies' completion-time costs (see
+    kernels.pairscore)."""
+    return _pairscore.pair_rate_tables(g_strong, g_weak, n0b=n0b,
+                                       pmax=pmax, bw=bw, oma=oma,
+                                       impl=impl)
 
 
 def wkv6(r, k, v, w_log, u, s0=None, *, impl: str = "xla", chunk: int = 64):

@@ -135,15 +135,45 @@ def pair_alloc_rates(g_i, g_j, *, n0b: float, pmax: float, bw: float,
                             interpret=(impl == "interpret"))
 
 
+def pair_rate_tables(g_strong, g_weak, *, n0b: float, pmax: float,
+                     bw: float, oma: bool = False, impl: str = "xla"
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """(..., K, N) per-user SIC rate tables (r_i, r_j): entry [k, n] is the
+    pair (strong user k, weak user n) under closed-form max-min power.
+    ``g_strong`` (..., K) and ``g_weak`` (..., N) batch over any shared
+    leading dims. Feeds the matching-based pairing policies' completion
+    -time cost tables (core/pairing.py, core/matching.py)."""
+    g_strong = jnp.asarray(g_strong)
+    g_weak = jnp.asarray(g_weak)
+    k = g_strong.shape[-1]
+    n = g_weak.shape[-1]
+    shape = g_strong.shape[:-1] + (k, n)
+    gi = jnp.broadcast_to(g_strong[..., :, None], shape)
+    gj = jnp.broadcast_to(g_weak[..., None, :], shape)
+    _, _, r_i, r_j = pair_alloc_rates(gi, gj, n0b=n0b, pmax=pmax, bw=bw,
+                                      oma=oma, impl=impl)
+    return r_i, r_j
+
+
+def effective_power_table(g_strong, g_weak, *, n0b: float,
+                          pmax: float) -> jax.Array:
+    """(..., K, N) table of min(y*(g_i), P g_j) — the strictly monotone
+    min-rate surrogate whose structural ties are precision-exact (the
+    greedy pairing policy's score surface; numpy twin in
+    ``core.pairing.effective_power_table``)."""
+    g_i = jnp.asarray(g_strong)
+    y = 2.0 * pmax * g_i * n0b / (
+        n0b + jnp.sqrt(n0b * n0b + 4.0 * pmax * g_i * n0b))
+    return jnp.minimum(y[..., :, None],
+                       pmax * jnp.asarray(g_weak)[..., None, :])
+
+
 def pair_score_matrix(g_strong, g_weak, *, n0b: float, pmax: float,
                       bw: float, impl: str = "xla") -> jax.Array:
-    """(K, N) min-rate table: score[k, n] = min SIC rate when candidate n is
-    the weak partner of strong user k — the candidate-rate scoring surface
-    for matching-based pairing policies and the engine benchmark."""
-    k = g_strong.shape[0]
-    n = g_weak.shape[0]
-    gi = jnp.broadcast_to(jnp.asarray(g_strong)[:, None], (k, n))
-    gj = jnp.broadcast_to(jnp.asarray(g_weak)[None, :], (k, n))
-    _, _, r_i, r_j = pair_alloc_rates(gi, gj, n0b=n0b, pmax=pmax, bw=bw,
-                                      impl=impl)
+    """(..., K, N) min-rate table: score[k, n] = min SIC rate when candidate
+    n is the weak partner of strong user k — the candidate-rate scoring
+    surface for matching-based pairing policies and the engine benchmark.
+    Batches over any shared leading dims of the gain vectors."""
+    r_i, r_j = pair_rate_tables(g_strong, g_weak, n0b=n0b, pmax=pmax,
+                                bw=bw, impl=impl)
     return jnp.minimum(r_i, r_j)

@@ -69,6 +69,7 @@ class TestArchSmoke:
                                 - params["embed"].astype(jnp.float32)))
         assert float(delta) > 0
 
+    @pytest.mark.slow
     def test_loss_decreases_over_steps(self, arch):
         cfg = get_config(arch).reduced()
         params, _ = zoo.init_model(jax.random.PRNGKey(0), cfg)
@@ -85,6 +86,7 @@ DECODER_ARCHS = [a for a in ARCH_IDS
                  if get_config(a).family not in ("encdec",)]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["stablelm_1_6b", "chatglm3_6b",
                                   "smollm_135m", "rwkv6_7b", "hymba_1_5b",
                                   "moonshot_v1_16b_a3b"])
@@ -110,6 +112,7 @@ def test_decode_matches_forward(arch):
     assert err <= 3e-4 * max(scale, 1.0)
 
 
+@pytest.mark.slow
 def test_encdec_decode_matches_forward():
     cfg = get_config("seamless_m4t_medium").reduced()
     params, _ = zoo.init_model(jax.random.PRNGKey(1), cfg)
@@ -135,6 +138,7 @@ def test_encdec_decode_matches_forward():
     assert err < 1e-4 * max(1.0, float(jnp.max(jnp.abs(lg_full))))
 
 
+@pytest.mark.slow
 def test_swa_ring_decode_matches_windowed_forward():
     cfg = dataclasses.replace(get_config("stablelm_1_6b").reduced(),
                               long_context_window=4)

@@ -135,6 +135,125 @@ class TestPallasParity:
         assert_parity(ref, eng.schedule(env))
 
 
+class TestPairingPolicyParity:
+    """Every ``FLConfig.pairing`` policy agrees numpy<->jax on both engine
+    cores (issue 4 acceptance)."""
+
+    @pytest.mark.parametrize("pairing",
+                             ["strong_weak", "adjacent", "hungarian",
+                              "greedy_matching"])
+    @pytest.mark.parametrize("seed", range(4))
+    def test_fast_path_matches_numpy(self, pairing, seed):
+        flp = dataclasses.replace(FLCFG, pairing=pairing)
+        eng = WirelessEngine(CFG_SMALL, flp)
+        for n in (5, 16):
+            env = make_env(700 + seed, n, CFG_SMALL)
+            ref = schedule_age_noma(env, CFG_SMALL, flp)
+            assert_parity(ref, eng.schedule(env))
+
+    @pytest.mark.parametrize("pairing",
+                             ["adjacent", "hungarian", "greedy_matching"])
+    @pytest.mark.parametrize("seed", range(3))
+    def test_budget_path_matches_numpy(self, pairing, seed):
+        flp = dataclasses.replace(FLCFG, pairing=pairing)
+        eng = WirelessEngine(CFG_SMALL, flp)
+        env = make_env(800 + seed, 16, CFG_SMALL, model_bits=2e7)
+        budget = schedule_age_noma(env, CFG_SMALL, flp).t_round * 0.5
+        flb = dataclasses.replace(flp, t_budget_s=budget)
+        ref = schedule_age_noma(env, CFG_SMALL, flb)
+        out = eng.schedule(env, t_budget=budget)
+        assert sorted(ref.info["evicted"]) == sorted(out.info["evicted"])
+        assert_parity(ref, out)
+
+    @pytest.mark.parametrize("pairing", ["hungarian", "greedy_matching"])
+    @pytest.mark.parametrize("seed", range(3))
+    def test_oma_matches_numpy(self, pairing, seed):
+        """OMA ablation: both sides score the completion table with OMA
+        rates (partner-independent), so the guard keeps strong_weak
+        deterministically on both."""
+        flp = dataclasses.replace(FLCFG, pairing=pairing)
+        eng = WirelessEngine(CFG_SMALL, flp)
+        env = make_env(1000 + seed, 16, CFG_SMALL)
+        ref = schedule_age_noma(env, CFG_SMALL, flp, oma=True)
+        assert_parity(ref, eng.schedule(env, oma=True))
+
+    @pytest.mark.parametrize("pairing", ["strong_weak", "hungarian"])
+    def test_wide_slots_matches_numpy(self, pairing):
+        """m > 3 exercises the assignment + multi-start 2-opt path."""
+        flp = dataclasses.replace(FLCFG, pairing=pairing)
+        eng = WirelessEngine(CFG_WIDE, flp)
+        for seed in range(3):
+            env = make_env(900 + seed, 40, CFG_WIDE)
+            assert_parity(schedule_age_noma(env, CFG_WIDE, flp),
+                          eng.schedule(env))
+
+    def test_hungarian_never_slower_than_strong_weak_engine(self):
+        eng_h = WirelessEngine(CFG_SMALL,
+                               dataclasses.replace(FLCFG,
+                                                   pairing="hungarian"))
+        eng_sw = WirelessEngine(CFG_SMALL, FLCFG)
+        for seed in range(8):
+            env = make_env(950 + seed, 16, CFG_SMALL)
+            assert eng_h.schedule(env).t_round <= \
+                eng_sw.schedule(env).t_round * (1 + 1e-6)
+
+
+class TestTiedSelectionParity:
+    """The (priority, gain, index) lexicographic tiebreak: tied-age
+    fixtures resolve by channel gain — identically in numpy and jax
+    (the old epsilon-gain nudge was numerically vacuous and ties fell
+    back to argsort order, systematically favouring low client indices)."""
+
+    def _tied_env(self, seed, n, ages):
+        rng = np.random.default_rng(seed)
+        d = noma.sample_distances(rng, n, CFG_SMALL)
+        return RoundEnv(
+            gains=noma.sample_gains(rng, d, CFG_SMALL),
+            n_samples=np.full(n, 500.0),     # equal weights => exact ties
+            cpu_freq=rng.uniform(0.5e9, 2e9, n),
+            ages=np.asarray(ages, np.int64),
+            model_bits=4e6)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_all_tied_selects_top_gains(self, seed):
+        n = 20
+        env = self._tied_env(seed, n, np.ones(n))
+        ref = schedule_age_noma(env, CFG_SMALL, FLCFG)
+        out = WirelessEngine(CFG_SMALL, FLCFG).schedule(env)
+        top = set(np.argsort(-env.gains)[:6])
+        assert set(np.flatnonzero(ref.selected)) == top
+        np.testing.assert_array_equal(ref.selected, out.selected)
+        assert sorted(ref.pairs) == sorted(out.pairs)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_partial_ties_resolve_by_gain(self, seed):
+        """Two age groups; within the boundary group the highest-gain
+        clients win, not the lowest-index ones."""
+        n = 20
+        ages = np.ones(n)
+        ages[:10] = 5                       # 10 tied candidates, 6 slots
+        env = self._tied_env(100 + seed, n, ages)
+        ref = schedule_age_noma(env, CFG_SMALL, FLCFG)
+        out = WirelessEngine(CFG_SMALL, FLCFG).schedule(env)
+        expect = set(np.arange(10)[np.argsort(-env.gains[:10])[:6]])
+        assert set(np.flatnonzero(ref.selected)) == expect
+        np.testing.assert_array_equal(ref.selected, out.selected)
+
+    def test_tied_budget_path_parity(self):
+        """The lexicographic order also drives the while-loop core's
+        admission + backfill cursor."""
+        n = 16
+        env = self._tied_env(42, n, np.ones(n))
+        env.model_bits = 2e7
+        budget = schedule_age_noma(env, CFG_SMALL, FLCFG).t_round * 0.6
+        flb = dataclasses.replace(FLCFG, t_budget_s=budget)
+        ref = schedule_age_noma(env, CFG_SMALL, flb)
+        out = WirelessEngine(CFG_SMALL, FLCFG).schedule(env,
+                                                        t_budget=budget)
+        np.testing.assert_array_equal(ref.selected, out.selected)
+        assert sorted(ref.info["evicted"]) == sorted(out.info["evicted"])
+
+
 class TestBatchedConsistency:
     def test_schedule_batch_matches_per_env(self):
         """One vmapped call == the same envs scheduled one by one."""

@@ -120,6 +120,7 @@ class TestServer:
         np.testing.assert_allclose(s1.distances, s2.distances)
         np.testing.assert_allclose(s1.n_samples, s2.n_samples)
 
+    @pytest.mark.slow
     def test_jax_engine_matches_numpy_selection(self):
         """FLConfig.engine='jax' routes scheduling through core/engine.py;
         same seed => same per-round selections and round times as the

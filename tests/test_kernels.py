@@ -22,6 +22,7 @@ class TestFedAgg:
         np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref),
                                    rtol=tol, atol=tol)
 
+    @pytest.mark.slow
     @given(st.integers(1, 12), st.integers(1, 5000),
            st.integers(0, 2 ** 31 - 1))
     @settings(max_examples=20, deadline=None)

@@ -45,6 +45,7 @@ class TestRoPE:
 
 
 class TestFlashAttention:
+    @pytest.mark.slow
     @given(st.integers(1, 3), st.integers(1, 4), st.integers(0, 100))
     @settings(max_examples=15, deadline=None)
     def test_chunked_equals_direct(self, b, g, seed):

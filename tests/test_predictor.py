@@ -114,6 +114,7 @@ class TestPredictorCore:
 
 
 class TestServerIntegration:
+    @pytest.mark.slow
     def test_none_is_bit_identical_to_default_path(self):
         """predictor="none" must take the exact pre-predictor code path."""
         s1 = FLServer(TINY, FL, NCFG, TASK, policy="age_noma")
@@ -126,6 +127,7 @@ class TestServerIntegration:
                         jax.tree.leaves(s2.params)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    @pytest.mark.slow
     def test_modes_share_selection_trajectory(self):
         """The predictor must not perturb the server rng: selections (and
         hence ages/round times) stay paired across none/ann."""
@@ -138,6 +140,7 @@ class TestServerIntegration:
             np.testing.assert_array_equal(a.selected, b.selected)
             assert a.t_round == pytest.approx(b.t_round)
 
+    @pytest.mark.slow
     def test_ann_records_telemetry(self):
         srv = FLServer(TINY, FL, NCFG, TASK, policy="age_noma",
                        predictor="ann", eval_every=10)

@@ -300,6 +300,7 @@ class TestMonteCarloParity:
     def test_mc_policies_cover_all_policies(self):
         assert MC_POLICIES == POLICIES
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("scenario", ["static_iid", "vehicular"])
     def test_fused_matches_presampled_bitwise(self, scenario):
         """The fused scenario loop and the ``presampled=`` escape hatch
@@ -325,6 +326,7 @@ class TestMonteCarloParity:
         for x, y in zip(a, b):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
+    @pytest.mark.slow
     def test_every_registered_scenario_runs_fused(self):
         for name in SCENARIOS:
             out = run_montecarlo(NCFG, FLCFG, policies=("age_noma",),
@@ -347,6 +349,7 @@ class TestMonteCarloParity:
         assert out["summary"]["round_robin"]["jain_participation"] == \
             pytest.approx(1.0)
 
+    @pytest.mark.slow
     def test_engine_random_selects_slot_count(self):
         out = run_montecarlo(NCFG, FLCFG, policies=("random",),
                              n_clients=16, n_seeds=4, rounds=4,

@@ -148,3 +148,93 @@ class TestScheduler:
         assert s.selected.sum() == 5
         solos = [p for p in s.pairs if p[1] == -1]
         assert len(solos) == 1
+
+    def test_tied_priorities_resolve_by_gain_not_index(self):
+        """Regression (issue 4): the documented gain tiebreak was
+        numerically vacuous (prio + 1e-12 * gains with gains ~1e-10 is
+        absorbed by float64), so ties silently favoured low client
+        indices. The lexsort fix must admit the HIGH-gain tied clients."""
+        rng = np.random.default_rng(11)
+        env = make_env(rng, 20)
+        env.n_samples[:] = 500.0        # equal weights
+        env.ages[:] = 1                 # all tied
+        # put the best channels at the END of the index range so the old
+        # argsort-stability behaviour (low index wins) would fail
+        env.gains[:] = np.sort(env.gains)
+        s = schedule_age_noma(env, NCFG, FLCFG)
+        assert set(np.flatnonzero(s.selected)) == set(range(14, 20))
+
+
+class TestBudgetBackfill:
+    """Regression tier for the eviction/backfill loop (issue 4): the loop
+    terminates, never re-admits an evicted client, and backfills only
+    never-admitted clients in priority order."""
+
+    def _run(self, seed, n, ncfg, budget_frac, model_bits=2e7):
+        rng = np.random.default_rng(seed)
+        from repro.core import noma
+        d = noma.sample_distances(rng, n, ncfg)
+        env = RoundEnv(gains=noma.sample_gains(rng, d, ncfg),
+                       n_samples=rng.integers(100, 1000, n).astype(float),
+                       cpu_freq=rng.uniform(0.5e9, 2e9, n),
+                       ages=aoi.init_ages(n), model_bits=model_bits)
+        free = schedule_age_noma(env, ncfg, FLCFG)
+        budget = free.t_round * budget_frac
+        flb = FLConfig(t_budget_s=budget)
+        return env, schedule_age_noma(env, ncfg, flb), budget
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_terminates_and_never_readmits_evicted(self, seed):
+        env, s, _ = self._run(seed, 14, NCFG, 0.4)
+        evicted = s.info["evicted"]
+        # termination is implied by returning; evicted set is disjoint
+        # from the final selection and has no duplicates
+        assert len(evicted) == len(set(evicted))
+        assert not (set(evicted) & set(np.flatnonzero(s.selected)))
+        assert s.selected.sum() >= 1
+
+    def test_slots_exceed_clients_edge(self):
+        """slots > n: everyone is admitted, the backfill queue is empty,
+        and the loop still terminates by draining to the floor."""
+        env, s, _ = self._run(3, 4, NCFG, 0.01)   # 6 slots > 4 clients
+        assert s.selected.sum() >= 1
+        assert len(s.info["evicted"]) <= 3     # can never evict the last
+        assert not (set(s.info["evicted"])
+                    & set(np.flatnonzero(s.selected)))
+
+    def test_backfill_takes_next_in_priority_order(self):
+        """The first eviction must backfill the highest-priority client
+        outside the initial admission (never an evicted one)."""
+        rng = np.random.default_rng(9)
+        from repro.core import noma
+        n = 12
+        d = noma.sample_distances(rng, n, NCFG)
+        env = RoundEnv(gains=noma.sample_gains(rng, d, NCFG),
+                       n_samples=rng.integers(100, 1000, n).astype(float),
+                       cpu_freq=rng.uniform(0.5e9, 2e9, n),
+                       ages=rng.integers(1, 30, n), model_bits=2e7)
+        free = schedule_age_noma(env, NCFG, FLCFG)
+        flb = FLConfig(t_budget_s=free.t_round * 0.5)
+        s = schedule_age_noma(env, NCFG, flb)
+        if not s.info["evicted"]:
+            return
+        w = env.n_samples / env.n_samples.sum()
+        prio = aoi.age_priority(env.ages, w, FLCFG.age_exponent)
+        order = np.lexsort((np.arange(n), -env.gains, -prio))
+        queue = [int(c) for c in order[6:]]
+        admitted = set(np.flatnonzero(s.selected)) | set(s.info["evicted"])
+        backfilled = [c for c in queue if c in admitted]
+        # backfilled clients form a prefix of the priority queue
+        k = len(backfilled)
+        assert backfilled == queue[:k]
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_evicted_info_consistent_with_engine(self, seed):
+        """numpy and jax report the same eviction set + selection."""
+        from repro.core.engine import WirelessEngine
+        env, s, budget = self._run(seed, 12, NCFG, 0.5)
+        out = WirelessEngine(NCFG, FLCFG).schedule(env, t_budget=budget)
+        np.testing.assert_array_equal(s.selected, out.selected)
+        assert sorted(s.info["evicted"]) == sorted(out.info["evicted"])

@@ -100,6 +100,7 @@ assert cost["flops"] > 0
 print("OK", cost["flops"], stats.wire_bytes, stats.count)
 """
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("arch", ["smollm_135m", "grok_1_314b",
                                       "rwkv6_7b"])
     def test_small_mesh_lower_compile(self, arch):
@@ -143,6 +144,7 @@ assert err < 1e-5, err
 print("OK", err)
 """
 
+    @pytest.mark.slow
     def test_ring_matches_flash(self):
         """Context-parallel ring attention == flash attention (the §Perf
         pair-2 optimization must be numerically faithful)."""
