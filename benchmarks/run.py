@@ -1,14 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only NAME]
 
 Prints ``name,...`` CSV rows; writes JSON artifacts to experiments/bench/.
+``--smoke`` is the CI alias of ``--quick``; ``--check-registry`` verifies
+(without running anything) that every ``benchmarks/*.py`` module is
+registered in ``BENCHES`` — the engine-bench CI job runs it so a new
+benchmark module cannot silently miss the harness.
 Claim mapping (DESIGN.md section 1):
     C1 fl_convergence      accuracy vs rounds/time per policy
     C2 noma_vs_oma         round-time NOMA vs OMA
     C3 fairness_age        staleness + participation fairness
     C4 pairing_optimality  heuristic vs exhaustive pairing
     C5 predictor_gain      ANN update predictor vs stale-reuse vs none
+       joint_selection     joint vs greedy_set selection vs the exhaustive
+                           joint (set x matching) optimum
        kernels             Pallas-kernel micro-benches
        roofline            dry-run derived roofline table
        engine_throughput   batched wireless engine drops/sec vs numpy
@@ -17,6 +23,7 @@ Claim mapping (DESIGN.md section 1):
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import time
 import traceback
@@ -25,6 +32,7 @@ from benchmarks import (
     engine_throughput,
     fairness_age,
     fl_convergence,
+    joint_selection,
     kernels_bench,
     noma_vs_oma,
     pairing_optimality,
@@ -43,6 +51,8 @@ BENCHES = {
         rounds=50 if quick else 200),
     "pairing_optimality": lambda quick: pairing_optimality.run(
         trials=30 if quick else 200),
+    "joint_selection": lambda quick: joint_selection.run(
+        trials=30 if quick else 200, smoke=quick),
     "kernels": lambda quick: kernels_bench.run(),
     "fl_convergence": lambda quick: fl_convergence.run(
         rounds=10 if quick else 40, quick=quick),
@@ -51,12 +61,42 @@ BENCHES = {
     "roofline": lambda quick: roofline_table.run(),
 }
 
+# modules in benchmarks/ that are not benchmarks themselves
+_NON_BENCH = {"run", "__init__"}
+# registry name -> module name where they differ
+_ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_table"}
+
+
+def check_registry() -> None:
+    """Every benchmarks/*.py module must be registered in BENCHES (so
+    ``--smoke`` exercises all of them). Exits non-zero on a miss."""
+    here = pathlib.Path(__file__).resolve().parent
+    modules = {p.stem for p in here.glob("*.py")} - _NON_BENCH
+    registered = {_ALIASES.get(name, name) for name in BENCHES}
+    missing = sorted(modules - registered)
+    stale = sorted(registered - modules)
+    if missing or stale:
+        print(f"benchmark registry mismatch: missing={missing} "
+              f"stale={stale}")
+        sys.exit(1)
+    print(f"benchmark registry ok: {len(BENCHES)} benchmarks registered, "
+          f"{len(modules)} modules on disk")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias of --quick (CI naming)")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--check-registry", action="store_true",
+                    help="verify every benchmarks/*.py module is "
+                         "registered, run nothing")
     args = ap.parse_args()
+    if args.check_registry:
+        check_registry()
+        return
+    quick = args.quick or args.smoke
 
     failed = []
     for name, fn in BENCHES.items():
@@ -65,7 +105,7 @@ def main() -> None:
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
-            fn(args.quick)
+            fn(quick)
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)

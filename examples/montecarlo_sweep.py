@@ -60,6 +60,9 @@ def main():
     ap.add_argument("--pairing", default="strong_weak",
                     help="subchannel pairing policy: strong_weak | "
                          "adjacent | hungarian | greedy_matching")
+    ap.add_argument("--selection", default="greedy_set",
+                    help="admitted-set selection mode: greedy_set | joint "
+                         "(pairing-aware admission, core/plan.py)")
     args = ap.parse_args()
 
     from repro.configs import FLConfig, NOMAConfig
@@ -70,7 +73,8 @@ def main():
             NOMAConfig(n_subchannels=5), FLConfig(),
             n_clients=args.clients, n_seeds=args.seeds, rounds=args.rounds,
             policies=POLICIES, model_bits=1e6, t_budget=args.budget,
-            seed=0, scenario=scenario, pairing=args.pairing)
+            seed=0, scenario=scenario, pairing=args.pairing,
+            selection=args.selection)
 
     outs = {args.scenario: sweep(args.scenario)}
     if args.vs:

@@ -239,6 +239,14 @@ class FLConfig:
     #   greedy_matching greedy max-score pairs on the effective-power
     #                   score table (precision-stable min-rate surrogate)
     pairing: str = "strong_weak"
+    # admitted-set selection mode (core/plan.py, DESIGN.md section 8):
+    #   greedy_set  top-slots clients by (priority, gain, index) — the
+    #               paper's sequential select-then-pair pipeline
+    #   joint       pairing-aware admission: the set whose best matching
+    #               minimizes round time (exhaustive on |N| <= 8, swap/prune
+    #               local search above; never slower than greedy_set per
+    #               round by construction)
+    selection: str = "greedy_set"
     # wireless environment dynamics (repro.sim registry: static_iid |
     # pedestrian | vehicular | iot_bursty | hotspot_shadowed)
     scenario: str = "static_iid"

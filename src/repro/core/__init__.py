@@ -10,6 +10,7 @@ from repro.core import (  # noqa: F401
     matching,
     noma,
     pairing,
+    plan,
     roundtime,
     scheduler,
 )
@@ -20,9 +21,11 @@ from repro.core.engine import (  # noqa: F401
     engine_schedule_to_numpy,
 )
 from repro.core.pairing import PAIRINGS, pair_candidates  # noqa: F401
+from repro.core.plan import SELECTIONS  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
     RoundEnv,
     Schedule,
+    exhaustive_joint_reference,
     exhaustive_pairing_reference,
     schedule_age_noma,
     schedule_channel_greedy,

@@ -2,9 +2,11 @@
 strong/weak SIC pairing, closed-form power allocation, budget eviction) as a
 jit/vmap-able function of fixed-shape arrays.
 
-The numpy scheduler (``core/scheduler.py``) stays the semantic reference;
-this module re-expresses it so thousands of Monte-Carlo channel drops run in
-one XLA call instead of a Python loop (DESIGN.md section 5):
+The staged round planner (``core/plan.py``) is the numpy fp64 semantic
+reference — score -> admit -> match -> allocate -> time, DESIGN.md
+section 8; this module transcribes each stage into fixed-shape twins so
+thousands of Monte-Carlo channel drops run in one XLA call instead of a
+Python loop (DESIGN.md section 5):
 
   * Python pair lists        -> fixed (P,) strong/weak index arrays, -1 pad;
   * odd candidate counts     -> weakest candidate on a solo subchannel,
@@ -20,7 +22,14 @@ one XLA call instead of a Python loop (DESIGN.md section 5):
                                 adjacent as index math, hungarian /
                                 greedy_matching via the batched assignment
                                 solvers in ``core/matching.py`` over the
-                                pair score tables (DESIGN.md section 7).
+                                pair score tables (DESIGN.md section 7);
+  * admitted-set selection   -> ``FLConfig.selection``: ``greedy_set``
+                                threshold admission, or ``joint``
+                                pairing-aware refinement (exhaustive
+                                enumeration / swap search over the shared
+                                ``plan.enumerate_subsets`` static tables +
+                                the ``_pick_faster`` never-worse guard,
+                                DESIGN.md section 8).
 
 Precision: the engine runs fp32 on device while the reference is fp64 numpy.
 The power-allocation root uses the cancellation-free conjugate form and
@@ -41,7 +50,14 @@ import numpy as np
 from repro.configs.base import FLConfig, NOMAConfig
 from repro.core import matching
 from repro.core.pairing import ENUM_MAX_PAIRS, PAIRINGS, enumerate_matchings
-from repro.core.scheduler import RoundEnv, Schedule
+from repro.core.plan import (
+    JOINT_ENUM_MAX_N,
+    JOINT_SWAP_ITERS,
+    SELECTIONS,
+    RoundEnv,
+    Schedule,
+    enumerate_subsets,
+)
 from repro.kernels import pairscore
 
 
@@ -242,6 +258,149 @@ def _lex_rank_desc(sorted_keys, sorted_idx, keys, idx):
 
 
 # ---------------------------------------------------------------------------
+# shared stage twins: completion tables + joint (pairing-aware) admission
+#
+# These transcribe the core/plan.py stage contract (DESIGN.md section 8):
+# the subset/matching enumeration orders, the swap/prune schedule, and the
+# never-worse guard are IMPORTED from plan.py so the fp64 reference and the
+# fp32 device path can never disagree on coverage or tiebreak order.
+# ---------------------------------------------------------------------------
+
+
+def _completion_table(g_sorted, t_cmp_sorted, model_bits, prm: EngineParams,
+                      oma: bool):
+    """``pairscore.completion_table`` with the engine's static params —
+    the ONE rate-table construction shared by the fast path's matching
+    solve, the budget core, and the joint admission search (rate-table
+    reuse; numpy twin: ``pairing.completion_table``)."""
+    return pairscore.completion_table(
+        g_sorted, t_cmp_sorted, model_bits, n0b=prm.noise_power_w,
+        pmax=prm.max_power_w, bw=prm.bandwidth_hz, oma=oma)
+
+
+def _sw_completion(mask, gains, t_cmp, model_bits, prm: EngineParams,
+                   oma: bool, c: int):
+    """Strong_weak completion of the ``c``-member sets in ``mask``
+    (jax twin of ``plan.sw_completion``): returns (t_round (B,),
+    per-rank completions (B, c), member client ids by rank (B, c))."""
+    n0b, pmax, bw = prm.noise_power_w, prm.max_power_w, prm.bandwidth_hz
+    sg, sidx = _bitonic_argsort_desc(jnp.where(mask, gains, -jnp.inf))
+    sg, sidx = sg[:, :c], sidx[:, :c]
+    tc = jnp.take_along_axis(t_cmp, sidx, axis=1)
+    odd = c % 2
+    cp = c - odd
+    m = cp // 2
+    mb = model_bits[:, None]
+    parts = []
+    if m:
+        g_wk = jnp.flip(sg[:, m:cp], axis=1)       # rank cp-1-p pairs rank p
+        _, _, r_i, r_j = pairscore._pair_math(sg[:, :m], g_wk, n0b=n0b,
+                                              pmax=pmax, bw=bw, oma=oma)
+        comp_s = tc[:, :m] + mb / jnp.maximum(r_i, 1e-9)
+        comp_w = jnp.flip(tc[:, m:cp], axis=1) + mb / jnp.maximum(r_j, 1e-9)
+        parts = [comp_s, jnp.flip(comp_w, axis=1)]
+    if odd:
+        solo = tc[:, cp:] + mb / jnp.maximum(
+            pairscore.solo_rate_math(sg[:, cp:], n0b=n0b, pmax=pmax, bw=bw),
+            1e-9)
+        parts.append(solo)
+    comp = jnp.concatenate(parts, axis=1)
+    return jnp.max(comp, axis=1), comp, sidx
+
+
+def _joint_enum_mask(gains, t_cmp, model_bits, prm: EngineParams, oma: bool,
+                     n: int, c: int):
+    """Exhaustive joint admission (static n <= JOINT_ENUM_MAX_N): evaluate
+    every C(n, c) candidate set at its optimal matching over the shared
+    ``plan.enumerate_subsets`` x ``pairing.enumerate_matchings`` static
+    tables, argmin-first. Solo convention: weakest member when c is odd."""
+    b = gains.shape[0]
+    subsets = jnp.asarray(enumerate_subsets(n, c), jnp.int32)    # (L, c)
+    g_s = gains[:, subsets]                                      # (B, L, c)
+    t_s = t_cmp[:, subsets]
+    sg, sidx = _bitonic_argsort_desc(g_s)
+    st = jnp.take_along_axis(t_s, sidx, axis=-1)
+    odd = c % 2
+    cp = c - odd
+    m = cp // 2
+    if m:
+        table = _completion_table(sg[..., :cp], st[..., :cp],
+                                  model_bits[:, None], prm, oma)
+        mt = jnp.asarray(enumerate_matchings(m), jnp.int32)      # (M, m, 2)
+        vals = table[:, :, mt[:, :, 0], mt[:, :, 1]]             # (B,L,M,m)
+        t_set = jnp.min(jnp.max(vals, axis=-1), axis=-1)         # (B, L)
+    else:
+        t_set = jnp.zeros(g_s.shape[:2], gains.dtype)
+    if odd:
+        solo = st[..., c - 1] + model_bits[:, None] / jnp.maximum(
+            pairscore.solo_rate_math(sg[..., c - 1], n0b=prm.noise_power_w,
+                                     pmax=prm.max_power_w,
+                                     bw=prm.bandwidth_hz), 1e-9)
+        t_set = jnp.maximum(t_set, solo)
+    members = jnp.take(subsets, jnp.argmin(t_set, axis=1), axis=0)  # (B, c)
+    return (jnp.zeros((b, gains.shape[1]), bool)
+            .at[jnp.arange(b)[:, None], members].set(True))
+
+
+def _joint_swap_mask(cand, gains, t_cmp, model_bits, prm: EngineParams,
+                     oma: bool, c: int):
+    """Swap/prune local search from the greedy admission (jax twin of
+    ``plan._swap_search``): JOINT_SWAP_ITERS unrolled iterations, each
+    swapping the bottleneck member for the non-member with the best solo
+    completion proxy, kept only on a strict strong_weak improvement (a
+    rejected swap freezes the lane — the numpy loop breaks there)."""
+    b = gains.shape[0]
+    rows = jnp.arange(b)
+    proxy = t_cmp + model_bits[:, None] / jnp.maximum(
+        pairscore.solo_rate_math(gains, n0b=prm.noise_power_w,
+                                 pmax=prm.max_power_w,
+                                 bw=prm.bandwidth_hz), 1e-9)
+    mask = cand
+    cur_t, comp, sidx = _sw_completion(mask, gains, t_cmp, model_bits, prm,
+                                       oma, c)
+    for _ in range(JOINT_SWAP_ITERS):
+        bneck = jnp.take_along_axis(sidx, jnp.argmax(comp, axis=1)[:, None],
+                                    axis=1)[:, 0]
+        incoming = jnp.argmin(jnp.where(mask, jnp.inf, proxy), axis=1)
+        new_mask = (mask.at[rows, bneck].set(False)
+                    .at[rows, incoming].set(True))
+        new_t, new_comp, new_sidx = _sw_completion(
+            new_mask, gains, t_cmp, model_bits, prm, oma, c)
+        imp = new_t < cur_t
+        mask = jnp.where(imp[:, None], new_mask, mask)
+        comp = jnp.where(imp[:, None], new_comp, comp)
+        sidx = jnp.where(imp[:, None], new_sidx, sidx)
+        cur_t = jnp.where(imp, new_t, cur_t)
+    return mask
+
+
+def _joint_refine_mask(cand, gains, t_cmp, model_bits, prm: EngineParams,
+                       oma: bool, n_cand0: int):
+    """Joint (pairing-aware) admission twin of ``plan.joint_admission`` —
+    WITHOUT the realized-time guard: callers evaluate both masks through
+    the shared finish stage and keep the strictly faster schedule
+    (``_pick_faster``), which is exactly the plan.py guard."""
+    n = gains.shape[-1]
+    if n_cand0 < 1 or n_cand0 >= n:
+        return cand
+    if n <= JOINT_ENUM_MAX_N:
+        return _joint_enum_mask(gains, t_cmp, model_bits, prm, oma, n,
+                                n_cand0)
+    return _joint_swap_mask(cand, gains, t_cmp, model_bits, prm, oma,
+                            n_cand0)
+
+
+def _pick_faster(a: EngineSchedule, b: EngineSchedule) -> EngineSchedule:
+    """Per-batch-element never-worse guard: ``a`` where strictly faster,
+    else ``b`` (ties keep ``b`` — the greedy set, matching plan.py)."""
+    better = a.t_round < b.t_round
+    return jax.tree.map(
+        lambda x, y: jnp.where(
+            better.reshape(better.shape + (1,) * (x.ndim - 1)), x, y),
+        a, b)
+
+
+# ---------------------------------------------------------------------------
 # fast batched path (no round-time budget)
 #
 # With no budget the eviction loop never runs and the schedule admits
@@ -253,18 +412,12 @@ def _lex_rank_desc(sorted_keys, sorted_idx, keys, idx):
 # ---------------------------------------------------------------------------
 
 
-def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
-                         prm: EngineParams, oma: bool, n_pairs: int,
-                         n_cand0: int, pairing_policy: str = "strong_weak"
-                         ) -> EngineSchedule:
+def _admit_fast(priority, gains, n_cand0: int):
+    """Stage-2 twin (greedy_set, static count): top-``n_cand0`` admission
+    mask by (priority desc, gain desc, index asc) — the ``plan.
+    admission_order`` tiebreak as threshold compares, no full argsort."""
     b, n = gains.shape
-    n0b, pmax, bw = prm.noise_power_w, prm.max_power_w, prm.bandwidth_hz
     c = n_cand0
-    odd = c % 2
-    c_pair = c - odd
-    m = c_pair // 2
-
-    # --- selection: top-c set by (priority, gain, index) lexicographic ----
     # threshold = c-th largest priority; sorting two halves simultaneously
     # (28 vs 36 bitonic stages at n=256) + a merge-path k-th query is
     # cheaper than one full-width sort
@@ -294,7 +447,22 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
     geq = eq & (gains == gthr)
     n_ggt = jnp.sum(ggt, axis=1, keepdims=True)
     geq_rank = jnp.cumsum(geq.astype(jnp.int32), axis=1)  # 1-based ties
-    cand = gt | ggt | (geq & (geq_rank <= need - n_ggt))  # exactly c
+    return gt | ggt | (geq & (geq_rank <= need - n_ggt))  # exactly c
+
+
+def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
+                 prm: EngineParams, oma: bool, n_pairs: int,
+                 n_cand0: int, pairing_policy: str = "strong_weak"
+                 ) -> EngineSchedule:
+    """Stages 3-5 for a static-count admission mask ``cand``: compaction,
+    pairing under the policy, power/rates, round time, client-space
+    gathers."""
+    b, n = gains.shape
+    n0b, pmax, bw = prm.noise_power_w, prm.max_power_w, prm.bandwidth_hz
+    c = n_cand0
+    odd = c % 2
+    c_pair = c - odd
+    m = c_pair // 2
 
     # --- compaction to (B, c) in client order (monotone cumsum + search) --
     cposc = jnp.cumsum(cand.astype(jnp.int32), axis=1)   # 1..c
@@ -352,14 +520,9 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
             # full sorted-rank completion table: the [0:m, m:] half-split
             # slice is the assignment cost, the whole table feeds the
             # bottleneck 2-opt + the never-slower guard (DESIGN.md 7.2)
-            ri_f, rj_f = pairscore.pair_rate_tables(
-                sg_c[:, :c_pair], sg_c[:, :c_pair], n0b=n0b, pmax=pmax,
-                bw=bw, oma=oma)
-            mb3 = model_bits[:, None, None]
-            tcp = t_cmp_srt[:, :c_pair]
-            table = jnp.maximum(
-                tcp[:, :, None] + mb3 / jnp.maximum(ri_f, 1e-9),
-                tcp[:, None, :] + mb3 / jnp.maximum(rj_f, 1e-9))
+            table = _completion_table(sg_c[:, :c_pair],
+                                      t_cmp_srt[:, :c_pair], model_bits,
+                                      prm, oma)
             rev = jnp.broadcast_to(
                 jnp.arange(c_pair - 1, m - 1, -1, dtype=jnp.int32), (b, m))
             if m <= ENUM_MAX_PAIRS:
@@ -444,16 +607,37 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
         evicted=jnp.zeros((b, n), bool))
 
 
+def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
+                         prm: EngineParams, oma: bool, n_pairs: int,
+                         n_cand0: int, pairing_policy: str = "strong_weak",
+                         selection: str = "greedy_set") -> EngineSchedule:
+    """Staged fast path: greedy admission -> finish; ``selection="joint"``
+    additionally refines the admitted set (``_joint_refine_mask``) and
+    keeps the refined schedule only where strictly faster (the plan.py
+    never-worse guard, realized under the active pairing policy)."""
+    cand = _admit_fast(priority, gains, n_cand0)
+    out = _fast_finish(cand, gains, t_cmp, n_samples, model_bits, prm, oma,
+                       n_pairs, n_cand0, pairing_policy)
+    if selection == "joint" and 0 < n_cand0 < gains.shape[-1]:
+        refined = _joint_refine_mask(cand, gains, t_cmp, model_bits, prm,
+                                     oma, n_cand0)
+        out = _pick_faster(
+            _fast_finish(refined, gains, t_cmp, n_samples, model_bits, prm,
+                         oma, n_pairs, n_cand0, pairing_policy), out)
+    return out
+
+
 @functools.partial(jax.jit,
                    static_argnames=("prm", "oma", "n_pairs", "n_cand0",
-                                    "pairing"))
+                                    "pairing", "selection"))
 def _fast_schedule_batch_core(priority, gains, t_cmp, n_samples, model_bits,
                               *, prm: EngineParams, oma: bool, n_pairs: int,
-                              n_cand0: int, pairing: str = "strong_weak"
+                              n_cand0: int, pairing: str = "strong_weak",
+                              selection: str = "greedy_set"
                               ) -> EngineSchedule:
     return _fast_schedule_batch(priority, gains, t_cmp, n_samples,
                                 model_bits, prm, oma, n_pairs, n_cand0,
-                                pairing)
+                                pairing, selection)
 
 
 def _age_priority(ages, n_samples, gains, gamma: float):
@@ -485,18 +669,19 @@ def _compute_times(prm: EngineParams, n_samples, cpu_freq):
 
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "oma",
                                              "n_pairs", "n_cand0",
-                                             "pairing"))
+                                             "pairing", "selection"))
 def _fast_from_env_core(gains, n_samples, cpu_freq, ages, model_bits, *,
                         prm: EngineParams, gamma: float, oma: bool,
                         n_pairs: int, n_cand0: int,
-                        pairing: str = "strong_weak") -> EngineSchedule:
+                        pairing: str = "strong_weak",
+                        selection: str = "greedy_set") -> EngineSchedule:
     """Age-priority preamble fused with the fast path: one dispatch per
     batch (the eager preamble otherwise costs several ms on CPU)."""
     priority = _age_priority(ages, n_samples, gains, gamma)
     t_cmp = _compute_times(prm, n_samples, cpu_freq)
     return _fast_schedule_batch(priority, gains, t_cmp, n_samples,
                                 model_bits, prm, oma, n_pairs, n_cand0,
-                                pairing)
+                                pairing, selection)
 
 
 # ---------------------------------------------------------------------------
@@ -509,7 +694,8 @@ def _assemble(cand, gains, t_cmp, model_bits, prm: EngineParams, oma: bool,
     """Pair the candidate mask under ``pairing_policy``, allocate power,
     scatter rates/powers.
 
-    Mirrors ``scheduler._rates_for``: sort candidates by gain (descending,
+    Mirrors ``plan.match_candidates`` + ``plan.allocate_rates``: sort
+    candidates by gain (descending,
     non-candidates pushed past the end with -inf keys), pair them per the
     policy (core/pairing.py is the fp64 reference); an odd count parks the
     weakest on a solo subchannel at full power. The candidate count is
@@ -550,11 +736,7 @@ def _assemble(cand, gains, t_cmp, model_bits, prm: EngineParams, oma: bool,
         r2 = jnp.clip(jnp.arange(s2), 0, n - 1)
         g_all = gains[sidx[r2]]
         tc_all = t_cmp[sidx[r2]]
-        ri_f, rj_f = pairscore.pair_rate_tables(g_all, g_all, n0b=n0b,
-                                                pmax=pmax, bw=bw, oma=oma)
-        table = jnp.maximum(
-            tc_all[:, None] + model_bits / jnp.maximum(ri_f, 1e-9),
-            tc_all[None, :] + model_bits / jnp.maximum(rj_f, 1e-9))
+        table = _completion_table(g_all, tc_all, model_bits, prm, oma)
         ii = i.astype(jnp.int32)
         rev = jnp.where(valid, c_pair - 1 - i, i).astype(jnp.int32)
 
@@ -641,10 +823,12 @@ class _LoopState(NamedTuple):
 
 def _schedule_one(priority, gains, t_cmp, n_samples, model_bits, t_budget,
                   prm: EngineParams, oma: bool, n_pairs: int, n_cand0: int,
-                  pairing: str = "strong_weak"):
+                  pairing: str = "strong_weak",
+                  selection: str = "greedy_set"):
     """One env: top-``n_cand0`` admission by (priority, gain, index)
-    lexicographic rank, then the budget eviction/backfill do-while
-    (``scheduler.schedule_age_noma``)."""
+    lexicographic rank (plus the joint refinement + realized-time guard
+    under ``selection="joint"``), then the budget eviction/backfill
+    do-while (``plan.plan_round``)."""
     n = gains.shape[0]
     gains = gains.astype(jnp.float32)
     order = jnp.lexsort((jnp.arange(n), -gains, -priority))
@@ -659,23 +843,39 @@ def _schedule_one(priority, gains, t_cmp, n_samples, model_bits, t_budget,
         t_round = jnp.max(tot)
         return strong, weak, rates, powers, t_com, tot, t_round
 
-    s0 = sched_of(cand0)
+    if selection == "joint" and 0 < n_cand0 < n:
+        refined = _joint_refine_mask(
+            cand0[None], gains[None], t_cmp[None],
+            jnp.reshape(jnp.asarray(model_bits, jnp.float32), (1,)), prm,
+            oma, n_cand0)[0]
+        s_joint = sched_of(refined)
+        s_greedy = sched_of(cand0)
+        use = s_joint[6] < s_greedy[6]      # never-worse guard (realized)
+        cand0 = jnp.where(use, refined, cand0)
+        s0 = tuple(jnp.where(use, a, b) for a, b in zip(s_joint, s_greedy))
+    else:
+        s0 = sched_of(cand0)
     count0 = jnp.sum(cand0.astype(jnp.int32))
     done0 = (t_budget <= 0.0) | (s0[6] <= t_budget) | (count0 <= 1)
     st = _LoopState(cand0, jnp.zeros(n, bool),
                     jnp.asarray(prm.slots, jnp.int32), done0, *s0)
 
     def body(st: _LoopState) -> _LoopState:
-        # evict the latency-critical client, backfill the next never-admitted
-        # client in priority order (cursor == the numpy re-scan, see module
-        # docstring)
+        # evict the latency-critical client, backfill the first
+        # never-admitted, never-evicted client at-or-after the cursor in
+        # priority order (== the numpy order[slots:] re-scan; joint
+        # admission can place later-order clients in cand, so the scan
+        # skips them instead of trusting a bare cursor)
         worst = jnp.argmax(st.tot)
         cand = st.cand.at[worst].set(False)
         evicted = st.evicted.at[worst].set(True)
-        fill = st.qptr < n
-        nxt_at = jnp.where(fill, order[jnp.clip(st.qptr, 0, n - 1)], n)
+        elig = (~cand[order] & ~evicted[order]
+                & (jnp.arange(n) >= st.qptr))
+        fill = jnp.any(elig)
+        pos = jnp.argmax(elig).astype(jnp.int32)
+        nxt_at = jnp.where(fill, order[pos], n)
         cand = cand.at[nxt_at].set(True, mode="drop")
-        qptr = st.qptr + fill.astype(jnp.int32)
+        qptr = jnp.where(fill, pos + 1, st.qptr)
         s = sched_of(cand)
         count = jnp.sum(cand.astype(jnp.int32))
         done = (s[6] <= t_budget) | (count <= 1)
@@ -697,13 +897,15 @@ def _schedule_one(priority, gains, t_cmp, n_samples, model_bits, t_budget,
 
 @functools.partial(jax.jit,
                    static_argnames=("prm", "oma", "n_pairs", "n_cand0",
-                                    "pairing"))
+                                    "pairing", "selection"))
 def _schedule_batch_core(priority, gains, t_cmp, n_samples, model_bits,
                          t_budget, *, prm: EngineParams, oma: bool,
                          n_pairs: int, n_cand0: int,
-                         pairing: str = "strong_weak") -> EngineSchedule:
+                         pairing: str = "strong_weak",
+                         selection: str = "greedy_set") -> EngineSchedule:
     fn = functools.partial(_schedule_one, prm=prm, oma=oma, n_pairs=n_pairs,
-                           n_cand0=n_cand0, pairing=pairing)
+                           n_cand0=n_cand0, pairing=pairing,
+                           selection=selection)
     return jax.vmap(fn)(priority, gains, t_cmp, n_samples, model_bits,
                         t_budget)
 
@@ -759,7 +961,8 @@ class WirelessEngine:
     def __init__(self, ncfg: NOMAConfig, flcfg: FLConfig, *,
                  use_pallas: bool = False,
                  pallas_impl: Optional[str] = None,
-                 pairing: Optional[str] = None):
+                 pairing: Optional[str] = None,
+                 selection: Optional[str] = None):
         self.ncfg = ncfg
         self.flcfg = flcfg
         self.prm = EngineParams.from_configs(ncfg, flcfg)
@@ -767,6 +970,11 @@ class WirelessEngine:
         if self.pairing not in PAIRINGS:
             raise ValueError(f"unknown pairing policy {self.pairing!r} "
                              f"(expected one of {PAIRINGS})")
+        self.selection = (flcfg.selection if selection is None
+                          else selection)
+        if self.selection not in SELECTIONS:
+            raise ValueError(f"unknown selection mode {self.selection!r} "
+                             f"(expected one of {SELECTIONS})")
         self.use_pallas = use_pallas
         if pallas_impl is None:
             pallas_impl = ("pallas" if jax.default_backend() == "tpu"
@@ -805,13 +1013,17 @@ class WirelessEngine:
     def schedule_batch(self, gains, n_samples, cpu_freq, ages, model_bits,
                        *, t_budget=0.0, oma: bool = False,
                        priority=None, shard: bool = False,
-                       pairing: Optional[str] = None) -> EngineSchedule:
+                       pairing: Optional[str] = None,
+                       selection: Optional[str] = None) -> EngineSchedule:
         """Vmapped joint round over a batch of envs.
 
         gains/n_samples/cpu_freq/ages: (B, N); model_bits/t_budget: scalar
         or (B,). ``priority=None`` uses the paper's age priority.
         ``pairing`` overrides the engine's subchannel pairing policy
-        (``FLConfig.pairing``; core/pairing.py).
+        (``FLConfig.pairing``; core/pairing.py); ``selection`` overrides
+        the admission mode (``FLConfig.selection``; core/plan.py —
+        ``joint`` refines the greedy set pairing-aware with a never-worse
+        guard).
 
         When ``t_budget`` is a plain scalar <= 0 (no budget, the Monte-Carlo
         default) the admission count is static and the scatter/sort-free
@@ -844,6 +1056,10 @@ class WirelessEngine:
                     priority = jax.device_put(
                         jnp.asarray(priority, jnp.float32), sh)
         pairing = self.pairing if pairing is None else pairing
+        selection = self.selection if selection is None else selection
+        if selection not in SELECTIONS:
+            raise ValueError(f"unknown selection mode {selection!r} "
+                             f"(expected one of {SELECTIONS})")
         no_budget = (isinstance(t_budget, (int, float))
                      and float(t_budget) <= 0.0)
         if no_budget and priority is None:
@@ -851,14 +1067,16 @@ class WirelessEngine:
             out = _fast_from_env_core(
                 gains, n_samples, jnp.asarray(cpu_freq, jnp.float32), ages,
                 model_bits, prm=self.prm, gamma=self.flcfg.age_exponent,
-                oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing)
+                oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing,
+                selection=selection)
         elif no_budget:
             priority = jnp.asarray(priority, jnp.float32)
             t_cmp = self.compute_times(n_samples,
                                        jnp.asarray(cpu_freq, jnp.float32))
             out = _fast_schedule_batch_core(
                 priority, gains, t_cmp, n_samples, model_bits, prm=self.prm,
-                oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing)
+                oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing,
+                selection=selection)
         else:
             if priority is None:
                 priority = self.age_priority(ages, n_samples, gains)
@@ -870,7 +1088,7 @@ class WirelessEngine:
             out = _schedule_batch_core(
                 priority, gains, t_cmp, n_samples, model_bits, t_budget,
                 prm=self.prm, oma=oma, n_pairs=n_pairs, n_cand0=n_cand0,
-                pairing=pairing)
+                pairing=pairing, selection=selection)
         if self.use_pallas:
             out = self._rescore(out, gains, model_bits, oma)
         return out
@@ -883,7 +1101,8 @@ class WirelessEngine:
     def schedule(self, env: RoundEnv, *, t_budget: Optional[float] = None,
                  oma: bool = False, priority=None,
                  policy: str = "age_noma",
-                 pairing: Optional[str] = None) -> Schedule:
+                 pairing: Optional[str] = None,
+                 selection: Optional[str] = None) -> Schedule:
         """Single-env convenience wrapper returning the numpy ``Schedule``
         (drop-in for ``schedule_age_noma``; used by ``FLServer``)."""
         if t_budget is None:
@@ -893,6 +1112,7 @@ class WirelessEngine:
             batchify(env.gains), batchify(env.n_samples),
             batchify(env.cpu_freq), batchify(env.ages), env.model_bits,
             t_budget=t_budget, oma=oma, pairing=pairing,
+            selection=selection,
             priority=None if priority is None else batchify(priority))
         return engine_schedule_to_numpy(out, 0, info={
             "policy": policy, "engine": "jax",
@@ -904,7 +1124,8 @@ class WirelessEngine:
     def montecarlo_rounds(self, gains_seq, n_samples, cpu_freq, model_bits,
                           *, policy: str = "age_noma", t_budget: float = 0.0,
                           seed: int = 0, shard: bool = False,
-                          pairing: Optional[str] = None):
+                          pairing: Optional[str] = None,
+                          selection: Optional[str] = None):
         """Roll the AoU state machine over R rounds for S seeds, one batched
         step per round: gains_seq (R, S, N); n_samples/cpu_freq either
         (S, N) static or (R, S, N) per-round (the scenario ``presampled=``
@@ -937,13 +1158,15 @@ class WirelessEngine:
                     cpu_freq if cpu_freq.ndim == 2 else cpu_freq[i])
 
         return self._mc_loop(env_fn, r, model_bits, policy=policy,
-                             t_budget=t_budget, seed=seed, pairing=pairing)
+                             t_budget=t_budget, seed=seed, pairing=pairing,
+                             selection=selection)
 
     def montecarlo_scenario(self, scenario, *, rounds: int, n_seeds: int,
                             n_clients: int, model_bits,
                             policy: str = "age_noma", t_budget: float = 0.0,
                             seed: int = 0, key=None, shard: bool = False,
-                            pairing: Optional[str] = None):
+                            pairing: Optional[str] = None,
+                            selection: Optional[str] = None):
         """Fully fused Monte-Carlo: the scenario's ``step(state, key) ->
         (state, env)`` transition advances the wireless environment on
         device between scheduled rounds — no host-side R x S x N gains
@@ -977,17 +1200,23 @@ class WirelessEngine:
             return env.gains, env.n_samples, env.cpu_freq
 
         return self._mc_loop(env_fn, rounds, model_bits, policy=policy,
-                             t_budget=t_budget, seed=seed, pairing=pairing)
+                             t_budget=t_budget, seed=seed, pairing=pairing,
+                             selection=selection)
 
     def _mc_loop(self, env_fn, rounds: int, model_bits, *, policy: str,
                  t_budget: float, seed: int,
-                 pairing: Optional[str] = None):
+                 pairing: Optional[str] = None,
+                 selection: Optional[str] = None):
         """R-round rollout: a Python loop of jitted per-round steps rather
         than ``lax.scan`` — on CPU the XLA while-loop runs the identical
         body ~1.7x slower than back-to-back jit dispatches. ``env_fn(i)``
         yields round i's (gains, n_samples, cpu_freq), either sliced from
         pre-sampled arrays or stepped out of a scenario state."""
         pairing = self.pairing if pairing is None else pairing
+        selection = self.selection if selection is None else selection
+        if selection not in SELECTIONS:
+            raise ValueError(f"unknown selection mode {selection!r} "
+                             f"(expected one of {SELECTIONS})")
         keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
         mb = jnp.asarray(model_bits, jnp.float32)
         ages = part = None
@@ -1005,7 +1234,7 @@ class WirelessEngine:
                 jnp.asarray(i, jnp.int32),
                 prm=self.prm, gamma=self.flcfg.age_exponent, policy=policy,
                 t_budget=float(t_budget), n_pairs=n_pairs, n_cand0=n_cand0,
-                pairing=pairing,
+                pairing=pairing, selection=selection,
                 pallas_impl=self.pallas_impl if self.use_pallas else None)
             t_rounds.append(t_round)
             n_sels.append(n_sel)
@@ -1019,12 +1248,13 @@ class WirelessEngine:
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "policy",
                                              "t_budget", "n_pairs",
                                              "n_cand0", "pairing",
-                                             "pallas_impl"))
+                                             "selection", "pallas_impl"))
 def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
                      model_bits, round_idx, *, prm: EngineParams,
                      gamma: float, policy: str, t_budget: float,
                      n_pairs: int, n_cand0: int,
                      pairing: str = "strong_weak",
+                     selection: str = "greedy_set",
                      pallas_impl: Optional[str] = None):
     """One Monte-Carlo round over all seeds; every policy in
     ``fl.rounds.POLICIES`` resolves to a priority vector here
@@ -1048,12 +1278,13 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
         raise ValueError(f"unknown montecarlo policy {policy!r}")
     if t_budget <= 0.0:
         sched = _fast_schedule_batch(prio, gains, t_cmp, n_samples, mb,
-                                     prm, oma, n_pairs, n_cand0, pairing)
+                                     prm, oma, n_pairs, n_cand0, pairing,
+                                     selection)
     else:
         tb = jnp.full((s,), t_budget, jnp.float32)
         one = functools.partial(_schedule_one, prm=prm, oma=oma,
                                 n_pairs=n_pairs, n_cand0=n_cand0,
-                                pairing=pairing)
+                                pairing=pairing, selection=selection)
         sched = jax.vmap(one)(prio, gains, t_cmp, n_samples, mb, tb)
     if pallas_impl is not None:
         sched = _rescore_pallas(sched, gains, mb, oma, prm, pallas_impl)

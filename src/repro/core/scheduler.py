@@ -1,159 +1,42 @@
-"""The paper's joint algorithm: age-based client selection + NOMA subchannel
-pairing + power allocation, with a round-time budget loop.
+"""Policy facade over the round planner (``core/plan.py``).
 
-Decomposition (DESIGN.md section 4):
-  1. rank clients by the age-utility  A_n^gamma * w_n, ties broken
-     lexicographically by channel gain then client index (np.lexsort — the
-     old epsilon-gain nudge ``prio + 1e-12 * g`` was numerically vacuous:
-     gains are ~1e-10, so the increment (~1e-22) vanished next to O(0.01–1)
-     priorities and ties silently resolved by argsort order);
-  2. admit the top J*K candidates;
-  3. pair candidates per subchannel under ``FLConfig.pairing``
-     (core/pairing.py: strong_weak | adjacent | hungarian |
-     greedy_matching; DESIGN.md section 7);
-  4. closed-form max-min power allocation per pair -> rates -> round time;
-  5. if T_round exceeds the budget, evict the latency-critical client and
-     re-pair (repeat).
-
-``exhaustive_pairing_reference`` brute-forces the optimal pairing for small
-instances — used by tests/benchmarks to check near-optimality (claim C4).
+The paper's joint algorithm — age-based selection + NOMA subchannel
+pairing + power allocation + budget eviction — lives in the staged
+planner (score -> admit -> match -> allocate -> time, DESIGN.md
+section 8); this module keeps the historical ``schedule_*`` entry points
+as thin drivers that build each policy's priority (or explicit candidate
+set) and hand off. ``RoundEnv``/``Schedule`` and the exhaustive
+references are re-exported for back-compat — the planner is their single
+source of truth, shared with the batched engine twins
+(``core/engine.py``).
 """
 from __future__ import annotations
-
-import dataclasses
-import itertools
-from typing import Optional
 
 import numpy as np
 
 from repro.configs.base import FLConfig, NOMAConfig
-from repro.core import aoi, noma, pairing, roundtime
-
-
-@dataclasses.dataclass
-class RoundEnv:
-    """Per-round wireless + client state visible to the scheduler."""
-    gains: np.ndarray        # (N,) channel power gains this round
-    n_samples: np.ndarray    # (N,) local dataset sizes
-    cpu_freq: np.ndarray     # (N,) Hz
-    ages: np.ndarray         # (N,) AoU
-    model_bits: float        # uplink payload
-
-
-@dataclasses.dataclass
-class Schedule:
-    selected: np.ndarray                 # (N,) bool
-    pairs: list                          # [(strong, weak), ...]; weak=-1 solo
-    rates: np.ndarray                    # (N,) bits/s (0 unselected)
-    powers: np.ndarray                   # (N,) W
-    t_cmp: np.ndarray                    # (N,) s
-    t_com: np.ndarray                    # (N,) s
-    t_round: float
-    agg_weights: np.ndarray              # (N,) aggregation weights
-    info: dict
+from repro.core import plan
+from repro.core.plan import (  # noqa: F401  (re-exported API)
+    RoundEnv,
+    Schedule,
+    exhaustive_joint_reference,
+    exhaustive_pairing_reference,
+)
 
 
 # ---------------------------------------------------------------------------
-# rate assembly for a candidate set
-# ---------------------------------------------------------------------------
-
-
-def _rates_for(cand: np.ndarray, env: RoundEnv, ncfg: NOMAConfig,
-               oma: bool = False, *, pairing_policy: str = "strong_weak",
-               t_cmp: Optional[np.ndarray] = None):
-    """Pair candidates under ``pairing_policy`` (core/pairing.py), allocate
-    power, return (pairs, rates, powers). ``t_cmp`` feeds the hungarian
-    policy's completion-time cost table."""
-    n = len(env.gains)
-    rates = np.zeros(n)
-    powers = np.zeros(n)
-    cand = np.asarray(cand, dtype=int)
-    solo = None
-    if len(cand) % 2 == 1:
-        # weakest-priority... give the weakest channel a solo subchannel
-        solo = int(cand[np.argmin(env.gains[cand])])
-        cand = cand[cand != solo]
-    pairs = pairing.pair_candidates(env.gains, cand, pairing_policy,
-                                    t_cmp=t_cmp,
-                                    model_bits=env.model_bits, ncfg=ncfg,
-                                    oma=oma)
-    if pairs:
-        gi = env.gains[[p[0] for p in pairs]]
-        gj = env.gains[[p[1] for p in pairs]]
-        if oma:
-            p_i = np.full(len(pairs), ncfg.max_power_w)
-            p_j = np.full(len(pairs), ncfg.max_power_w)
-            r_i, r_j = noma.oma_pair_rates(p_i, p_j, gi, gj, ncfg)
-        else:
-            p_i, p_j = noma.pair_power_allocation(gi, gj, ncfg)
-            r_i, r_j = noma.pair_rates(p_i, p_j, gi, gj, ncfg)
-        for m, (i, j) in enumerate(pairs):
-            rates[i], rates[j] = r_i[m], r_j[m]
-            powers[i], powers[j] = p_i[m], p_j[m]
-    out_pairs = [(i, j) for (i, j) in pairs]
-    if solo is not None:
-        rates[solo] = noma.solo_rate(ncfg.max_power_w, env.gains[solo], ncfg)
-        powers[solo] = ncfg.max_power_w
-        out_pairs.append((solo, -1))
-    return out_pairs, rates, powers
-
-
-def _finalize(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
-              oma: bool, info: dict) -> Schedule:
-    n = len(env.gains)
-    t_cmp = roundtime.compute_times(env.n_samples,
-                                    flcfg.cpu_cycles_per_sample,
-                                    env.cpu_freq, flcfg.local_epochs)
-    pairs, rates, powers = _rates_for(cand, env, ncfg, oma,
-                                      pairing_policy=flcfg.pairing,
-                                      t_cmp=t_cmp)
-    selected = np.zeros(n, dtype=bool)
-    selected[list(cand)] = True
-    t_com = roundtime.comm_times(env.model_bits, rates)
-    t_rd = roundtime.round_time(t_cmp, t_com, selected)
-    w = env.n_samples.astype(np.float64) * selected
-    w = w / max(w.sum(), 1e-12)
-    return Schedule(selected, pairs, rates, powers, t_cmp, t_com, t_rd, w,
-                    info)
-
-
-# ---------------------------------------------------------------------------
-# policies
+# policies (thin planner drivers)
 # ---------------------------------------------------------------------------
 
 
 def schedule_age_noma(env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
                       *, oma: bool = False) -> Schedule:
     """The paper's joint algorithm (set ``oma=True`` for the age-OMA
-    ablation)."""
-    n = len(env.gains)
-    slots = ncfg.n_subchannels * ncfg.users_per_subchannel
-    w = env.n_samples / env.n_samples.sum()
-    prio = aoi.age_priority(env.ages, w, flcfg.age_exponent)
-    # true lexicographic (priority desc, gain desc, index asc) ranking —
-    # the old ``prio + 1e-12 * gains`` epsilon was absorbed by float64
-    # rounding (gains ~1e-10 => increment ~1e-22 next to O(0.01-1)
-    # priorities), so ties actually resolved by argsort order
-    order = np.lexsort((np.arange(n), -env.gains, -prio))
-    cand = list(order[:min(slots, n)])
-
-    evicted = []
-    while True:
-        sched = _finalize(cand, env, ncfg, flcfg, oma,
-                          {"policy": "age_oma" if oma else "age_noma",
-                           "evicted": list(evicted)})
-        if flcfg.t_budget_s <= 0 or sched.t_round <= flcfg.t_budget_s \
-                or len(cand) <= 1:
-            return sched
-        # evict the latency-critical client, try to backfill from the queue
-        tot = (sched.t_cmp + sched.t_com) * sched.selected
-        worst = int(np.argmax(tot))
-        cand.remove(worst)
-        evicted.append(worst)
-        for nxt in order[slots:]:
-            if nxt not in cand and nxt not in evicted and len(cand) < slots:
-                cand.append(int(nxt))
-                break
+    ablation): age priority into the staged planner, budget loop and
+    ``FLConfig.selection`` mode included."""
+    return plan.plan_round(
+        env, ncfg, flcfg, priority=plan.age_score(env, flcfg), oma=oma,
+        info={"policy": "age_oma" if oma else "age_noma"})
 
 
 def schedule_random(rng: np.random.Generator, env: RoundEnv,
@@ -161,15 +44,16 @@ def schedule_random(rng: np.random.Generator, env: RoundEnv,
     n = len(env.gains)
     slots = min(ncfg.n_subchannels * ncfg.users_per_subchannel, n)
     cand = rng.choice(n, size=slots, replace=False)
-    return _finalize(cand, env, ncfg, flcfg, False, {"policy": "random"})
+    return plan.plan_fixed(cand, env, ncfg, flcfg,
+                           info={"policy": "random"})
 
 
 def schedule_channel_greedy(env: RoundEnv, ncfg: NOMAConfig,
                             flcfg: FLConfig) -> Schedule:
-    n = len(env.gains)
-    slots = min(ncfg.n_subchannels * ncfg.users_per_subchannel, n)
-    cand = np.argsort(-env.gains)[:slots]
-    return _finalize(cand, env, ncfg, flcfg, False, {"policy": "channel"})
+    # priority = gains reproduces argsort(-gains) exactly (the gain
+    # tiebreak coincides with the priority key; ties fall to index asc)
+    return plan.plan_round(env, ncfg, flcfg, priority=env.gains,
+                           t_budget=0.0, info={"policy": "channel"})
 
 
 def schedule_round_robin(t: int, env: RoundEnv, ncfg: NOMAConfig,
@@ -178,39 +62,5 @@ def schedule_round_robin(t: int, env: RoundEnv, ncfg: NOMAConfig,
     slots = min(ncfg.n_subchannels * ncfg.users_per_subchannel, n)
     start = (t * slots) % n
     cand = [(start + i) % n for i in range(slots)]
-    return _finalize(cand, env, ncfg, flcfg, False, {"policy": "round_robin"})
-
-
-# ---------------------------------------------------------------------------
-# exhaustive pairing reference (claim C4)
-# ---------------------------------------------------------------------------
-
-
-def exhaustive_pairing_reference(cand, env: RoundEnv, ncfg: NOMAConfig,
-                                 flcfg: FLConfig) -> float:
-    """Optimal round time over ALL pairings of the candidate set (per-pair
-    power allocation stays closed-form max-min, which is optimal for a fixed
-    pair). Exponential — tests only (|cand| <= 8). The matching set comes
-    from ``pairing.enumerate_matchings`` — the same (single) generator the
-    hungarian policy's small-instance enumeration uses, so the two can
-    never disagree on coverage or order."""
-    cand = list(int(c) for c in cand)
-    assert len(cand) % 2 == 0 and len(cand) <= 8
-    t_cmp = roundtime.compute_times(env.n_samples,
-                                    flcfg.cpu_cycles_per_sample,
-                                    env.cpu_freq, flcfg.local_epochs)
-    best = np.inf
-    for rows in pairing.enumerate_matchings(len(cand) // 2):
-        t_round = 0.0
-        for (ia, ib) in rows:
-            a, b = cand[ia], cand[ib]
-            i, j = (a, b) if env.gains[a] >= env.gains[b] else (b, a)
-            p_i, p_j = noma.pair_power_allocation(
-                env.gains[i:i + 1], env.gains[j:j + 1], ncfg)
-            r_i, r_j = noma.pair_rates(p_i, p_j, env.gains[i:i + 1],
-                                       env.gains[j:j + 1], ncfg)
-            t_round = max(t_round,
-                          t_cmp[i] + env.model_bits / max(float(r_i[0]), 1e-9),
-                          t_cmp[j] + env.model_bits / max(float(r_j[0]), 1e-9))
-        best = min(best, t_round)
-    return float(best)
+    return plan.plan_fixed(cand, env, ncfg, flcfg,
+                           info={"policy": "round_robin"})

@@ -25,10 +25,10 @@ MC_POLICIES = POLICIES
 def run_experiment(model_cfg: ModelConfig, fl: FLConfig, nomacfg: NOMAConfig,
                    task: TaskConfig, policy: str, *, rounds=None,
                    verbose=False, seed=None, agg_impl="xla",
-                   predictor=None, pairing=None) -> History:
+                   predictor=None, pairing=None, selection=None) -> History:
     server = FLServer(model_cfg, fl, nomacfg, task, policy=policy,
                       seed=seed, agg_impl=agg_impl, predictor=predictor,
-                      pairing=pairing)
+                      pairing=pairing, selection=selection)
     return server.run(rounds, verbose=verbose)
 
 
@@ -68,7 +68,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
                    use_pallas: bool = False,
                    scenario: str | object = "static_iid",
                    presampled: bool = False, shard: bool = False,
-                   pairing: Optional[str] = None) -> dict:
+                   pairing: Optional[str] = None,
+                   selection: Optional[str] = None) -> dict:
     """Wireless-layer Monte-Carlo: compare selection/RA policies over
     ``n_seeds`` independent environment realizations x ``rounds``, one
     batched engine call per round.
@@ -98,10 +99,11 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
 
     nomacfg = nomacfg or NOMAConfig()
     flcfg = flcfg or FLConfig()
-    # subchannel pairing policy: every POLICY x scenario sweep can run any
-    # pairing (core/pairing.py; threaded through the fused MC step)
+    # subchannel pairing policy + admitted-set selection mode: every
+    # POLICY x scenario sweep can run any (pairing, selection) combination
+    # (core/pairing.py, core/plan.py; threaded through the fused MC step)
     eng = WirelessEngine(nomacfg, flcfg, use_pallas=use_pallas,
-                         pairing=pairing)
+                         pairing=pairing, selection=selection)
     scn = as_scenario(scenario, nomacfg, flcfg)
     s, n, r = n_seeds, n_clients, rounds
     k_env = jax.random.PRNGKey(seed)
@@ -121,7 +123,7 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
         "model_bits": model_bits, "t_budget": t_budget,
         "scenario": scn.name, "presampled": bool(presampled),
         "slots": eng.prm.slots, "use_pallas": use_pallas,
-        "pairing": eng.pairing}}
+        "pairing": eng.pairing, "selection": eng.selection}}
     for policy in policies:
         tb = t_budget
         if policy == "age_noma_budget" and tb <= 0.0:

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig, NOMAConfig
-from repro.core import aoi
+from repro.core import aoi, plan
 from repro.core.engine import WirelessEngine
 from repro.core.scheduler import (
     RoundEnv,
@@ -90,16 +90,23 @@ class FLServer:
                  predictor: Optional[str] = None,
                  engine: Optional[str] = None,
                  scenario: Optional[str] = None,
-                 pairing: Optional[str] = None):
-        # subchannel pairing policy (core/pairing.py): an explicit override
-        # rewrites the config so the numpy scheduler (_finalize reads
-        # fl.pairing) and the jax engine stay on the same policy
+                 pairing: Optional[str] = None,
+                 selection: Optional[str] = None):
+        # subchannel pairing policy (core/pairing.py) + admitted-set
+        # selection mode (core/plan.py): explicit overrides rewrite the
+        # config so the numpy planner (which reads fl.pairing/fl.selection)
+        # and the jax engine stay on the same policy
         if pairing is not None:
             fl = dataclasses.replace(fl, pairing=pairing)
+        if selection is not None:
+            fl = dataclasses.replace(fl, selection=selection)
         from repro.core.pairing import PAIRINGS
         if fl.pairing not in PAIRINGS:
             raise ValueError(f"unknown pairing {fl.pairing!r} "
                              f"(expected one of {PAIRINGS})")
+        if fl.selection not in plan.SELECTIONS:
+            raise ValueError(f"unknown selection {fl.selection!r} "
+                             f"(expected one of {plan.SELECTIONS})")
         self.cfg = model_cfg
         self.fl = fl
         self.noma = nomacfg
@@ -178,35 +185,41 @@ class FLServer:
 
     # -- scheduling --------------------------------------------------------
     def select(self, env: RoundEnv) -> Schedule:
-        """Shared selection path: every policy resolves here, so each can
-        run with or without the update predictor."""
+        """Shared selection path — a thin driver over the round planner
+        (core/plan.py): every policy resolves to a priority vector or an
+        explicit candidate set and hands off to the scheduler's planner
+        drivers (numpy) or the engine stage twins (jax), so each policy
+        can run with or without the update predictor, under any pairing
+        policy and either ``FLConfig.selection`` mode."""
         p = self.policy
-        if p == "age_noma":
+        if p in ("age_noma", "age_noma_budget", "oma_age"):
+            oma = p == "oma_age"
+            t_budget = None
+            if p == "age_noma_budget":
+                # the paper's JOINT constraint: age priority under a
+                # round-time budget (auto-calibrated to ~2x the
+                # channel-greedy round time on the first round if the
+                # config leaves it unset)
+                if self._auto_budget is None:
+                    ref = schedule_channel_greedy(env, self.noma, self.fl)
+                    self._auto_budget = (self.fl.t_budget_s
+                                         or 2.0 * max(ref.t_round, 1e-6))
+                t_budget = self._auto_budget
             if self.engine is not None:
-                return self.engine.schedule(env, policy=p)
-            return schedule_age_noma(env, self.noma, self.fl)
-        if p == "age_noma_budget":
-            # the paper's JOINT constraint: age priority under a round-time
-            # budget (auto-calibrated to ~2x the channel-greedy round time
-            # on the first round if the config leaves it unset)
-            if self._auto_budget is None:
-                ref = schedule_channel_greedy(env, self.noma, self.fl)
-                self._auto_budget = (self.fl.t_budget_s
-                                     or 2.0 * max(ref.t_round, 1e-6))
-            if self.engine is not None:
-                return self.engine.schedule(env, t_budget=self._auto_budget,
-                                            policy=p)
-            import dataclasses as _dc
-            flb = _dc.replace(self.fl, t_budget_s=self._auto_budget)
-            return schedule_age_noma(env, self.noma, flb)
-        if p == "oma_age":
-            if self.engine is not None:
-                return self.engine.schedule(env, oma=True, policy=p)
-            return schedule_age_noma(env, self.noma, self.fl, oma=True)
+                if t_budget is not None:
+                    return self.engine.schedule(env, t_budget=t_budget,
+                                                oma=oma, policy=p)
+                return self.engine.schedule(env, oma=oma, policy=p)
+            if t_budget is None:
+                return schedule_age_noma(env, self.noma, self.fl, oma=oma)
+            flb = dataclasses.replace(self.fl, t_budget_s=t_budget)
+            return schedule_age_noma(env, self.noma, flb, oma=oma)
         # non-age policies: the engine path expresses each as a priority
-        # vector (full engine coverage of POLICIES); numpy stays the
-        # reference implementation
+        # vector (full engine coverage of POLICIES); the numpy side goes
+        # through the scheduler's thin planner drivers
         n = self.fl.n_clients
+        slots = min(self.noma.n_subchannels
+                    * self.noma.users_per_subchannel, n)
         if p == "random":
             if self.engine is not None:
                 return self.engine.schedule(
@@ -221,8 +234,6 @@ class FLServer:
         if p == "round_robin":
             if self.engine is not None:
                 from repro.core.engine import round_robin_priority
-                slots = min(self.noma.n_subchannels
-                            * self.noma.users_per_subchannel, n)
                 return self.engine.schedule(
                     env, t_budget=0.0, policy=p,
                     priority=round_robin_priority(self.round_idx, n, slots))

@@ -73,6 +73,17 @@ def pair_rate_tables(g_strong, g_weak, *, n0b: float, pmax: float,
                                        impl=impl)
 
 
+def completion_table(g_sorted, t_cmp_sorted, model_bits, *, n0b: float,
+                     pmax: float, bw: float, oma: bool = False,
+                     impl: str = "xla"):
+    """(..., c, c) pair completion-time table over gain-sorted candidates —
+    the round planner's shared matching/search surface, one
+    ``pair_rate_tables`` call (see kernels.pairscore; DESIGN.md 8.3)."""
+    return _pairscore.completion_table(g_sorted, t_cmp_sorted, model_bits,
+                                       n0b=n0b, pmax=pmax, bw=bw, oma=oma,
+                                       impl=impl)
+
+
 def wkv6(r, k, v, w_log, u, s0=None, *, impl: str = "xla", chunk: int = 64):
     """Chunked RWKV6. Returns (out (B,H,T,C) fp32, s_T). The Pallas path
     currently supports zero initial state (training segments)."""

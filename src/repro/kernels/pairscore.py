@@ -155,6 +155,23 @@ def pair_rate_tables(g_strong, g_weak, *, n0b: float, pmax: float,
     return r_i, r_j
 
 
+def completion_table(g_sorted, t_cmp_sorted, model_bits, *, n0b: float,
+                     pmax: float, bw: float, oma: bool = False,
+                     impl: str = "xla") -> jax.Array:
+    """(..., c, c) pair completion-time table over gain-sorted candidates:
+    entry [p, q] = max over the two users of T_cmp + S/R with rank p
+    strong, rank q weak, under closed-form max-min power. Built on ONE
+    ``pair_rate_tables`` call — the shared matching/search surface of the
+    round planner (numpy twin: ``pairing.completion_table``; DESIGN.md
+    8.3). ``model_bits`` broadcasts over the leading batch dims."""
+    r_i, r_j = pair_rate_tables(g_sorted, g_sorted, n0b=n0b, pmax=pmax,
+                                bw=bw, oma=oma, impl=impl)
+    mb = jnp.asarray(model_bits)[..., None, None]
+    t = jnp.asarray(t_cmp_sorted)
+    return jnp.maximum(t[..., :, None] + mb / jnp.maximum(r_i, 1e-9),
+                       t[..., None, :] + mb / jnp.maximum(r_j, 1e-9))
+
+
 def effective_power_table(g_strong, g_weak, *, n0b: float,
                           pmax: float) -> jax.Array:
     """(..., K, N) table of min(y*(g_i), P g_j) — the strictly monotone

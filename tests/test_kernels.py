@@ -81,6 +81,26 @@ class TestPairScore:
         assert score.shape == (5, 17)
         assert np.all(np.asarray(score) > 0)
 
+    def test_completion_table_matches_numpy_twin(self):
+        """kernels completion_table == pairing.completion_table (fp64
+        planner reference) within fp32 tol — the round planner's shared
+        matching/search surface (DESIGN.md 8.3); exercised through the
+        ops dispatch facade."""
+        from repro.configs import NOMAConfig
+        from repro.core import pairing
+        from repro.kernels import ops
+        cfg = NOMAConfig()
+        rng = np.random.default_rng(5)
+        g = np.sort(rng.uniform(1e-14, 1e-10, 8))[::-1].copy()
+        tc = rng.uniform(0.1, 2.0, 8)
+        mb = 4e6
+        ref = pairing.completion_table(g, g, tc, tc, mb, cfg)
+        out = ops.completion_table(
+            g.astype(np.float32), tc.astype(np.float32), mb,
+            n0b=cfg.noise_density * cfg.bandwidth_hz, pmax=cfg.max_power_w,
+            bw=cfg.bandwidth_hz)
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4)
+
     def test_matches_numpy_reference_formulas(self):
         """Kernel math == core.noma closed forms (fp64) within fp32 tol."""
         from repro.configs import NOMAConfig

@@ -1,0 +1,243 @@
+"""Planner tier (core/plan.py): per-stage numpy<->jax parity fixtures and
+the joint-selection property tier.
+
+Stage fixtures pin each planner stage against its engine twin — scores,
+admitted set, pairs, powers, t_round — for both selection modes and the
+pairing policies. The property tier asserts the issue-5 acceptance
+criteria: ``selection="joint"`` is never slower than ``greedy_set`` per
+round (both engines, every pairing) and matches the exhaustive joint
+(set x matching) optimum on every |N| <= 8 instance under hungarian
+pairing.
+
+Envs use continuous gains/n_samples so priorities are distinct almost
+surely (exact ties may resolve differently across precisions — DESIGN.md
+section 5.4).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, NOMAConfig
+from repro.core import noma, plan
+from repro.core.engine import WirelessEngine, _admit_fast, _age_priority
+from repro.core.plan import RoundEnv
+from repro.core.scheduler import schedule_age_noma
+
+RTOL = 1e-4    # fp32 engine vs fp64 reference
+FLCFG = FLConfig()
+CFG2 = NOMAConfig(n_subchannels=2)     # slots 4
+CFG3 = NOMAConfig(n_subchannels=3)     # slots 6
+
+
+def make_env(seed, n, ncfg, model_bits=4e6):
+    rng = np.random.default_rng(seed)
+    d = noma.sample_distances(rng, n, ncfg)
+    return RoundEnv(
+        gains=noma.sample_gains(rng, d, ncfg),
+        n_samples=rng.uniform(100, 1000, n),
+        cpu_freq=rng.uniform(0.5e9, 2e9, n),
+        ages=rng.integers(1, 30, n),
+        model_bits=model_bits)
+
+
+def assert_parity(ref, out):
+    np.testing.assert_array_equal(ref.selected, out.selected)
+    assert sorted(ref.pairs) == sorted(out.pairs)
+    np.testing.assert_allclose(out.powers, ref.powers, atol=1e-5)
+    np.testing.assert_allclose(out.rates, ref.rates, rtol=RTOL)
+    assert out.t_round == pytest.approx(ref.t_round, rel=RTOL)
+
+
+class TestStageParity:
+    """Each planner stage against its fixed-shape engine twin."""
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_score_stage(self, seed):
+        env = make_env(seed, 24, CFG3)
+        ref = plan.age_score(env, FLCFG)
+        import jax.numpy as jnp
+        out = np.asarray(_age_priority(
+            jnp.asarray(env.ages, jnp.float32),
+            jnp.asarray(env.n_samples, jnp.float32),
+            jnp.asarray(env.gains, jnp.float32), FLCFG.age_exponent))
+        np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_admission_stage(self, seed):
+        """Greedy admission: lexsort top-c (numpy) == threshold-pass mask
+        (engine fast path)."""
+        import jax.numpy as jnp
+        env = make_env(100 + seed, 24, CFG3)
+        prio = plan.age_score(env, FLCFG)
+        order = plan.admission_order(prio, env.gains)
+        c = min(CFG3.n_subchannels * CFG3.users_per_subchannel,
+                len(env.gains))
+        ref = np.zeros(len(env.gains), bool)
+        ref[order[:c]] = True
+        mask = np.asarray(_admit_fast(
+            jnp.asarray(prio, jnp.float32)[None],
+            jnp.asarray(env.gains, jnp.float32)[None], c)[0])
+        np.testing.assert_array_equal(mask, ref)
+
+    @pytest.mark.parametrize("pairing", ("strong_weak", "hungarian"))
+    @pytest.mark.parametrize("selection", ("greedy_set", "joint"))
+    @pytest.mark.parametrize("seed", range(3))
+    def test_full_pipeline_stages(self, seed, selection, pairing):
+        """Pairs / powers / rates / t_round out of the staged pipeline
+        agree pair-for-pair across engines, both selection modes."""
+        env = make_env(200 + seed, 16, CFG3)
+        fl = dataclasses.replace(FLCFG, pairing=pairing,
+                                 selection=selection)
+        ref = schedule_age_noma(env, CFG3, fl)
+        out = WirelessEngine(CFG3, fl).schedule(env)
+        assert_parity(ref, out)
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_joint_enum_branch_parity(self, seed):
+        """|N| <= 8 routes joint admission through the exhaustive subset
+        enumeration on both sides (odd admitted count -> solo handling)."""
+        env = make_env(300 + seed, 7, CFG2)
+        fl = dataclasses.replace(FLCFG, pairing="hungarian",
+                                 selection="joint")
+        ref = schedule_age_noma(env, CFG2, fl)
+        out = WirelessEngine(CFG2, fl).schedule(env)
+        assert_parity(ref, out)
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_joint_budget_parity(self, seed):
+        """Joint admission composes with the budget eviction loop: same
+        final set, same eviction list, same t_round across engines."""
+        env = make_env(400 + seed, 16, CFG3, model_bits=2e7)
+        fl = dataclasses.replace(FLCFG, selection="joint")
+        budget = schedule_age_noma(env, CFG3, fl).t_round * 0.5
+        flb = dataclasses.replace(fl, t_budget_s=budget)
+        ref = schedule_age_noma(env, CFG3, flb)
+        out = WirelessEngine(CFG3, flb).schedule(env, t_budget=budget)
+        assert sorted(ref.info["evicted"]) == sorted(out.info["evicted"])
+        assert_parity(ref, out)
+
+
+class TestSubsetEnumeration:
+    def test_shapes_and_order(self):
+        s = plan.enumerate_subsets(5, 3)
+        assert s.shape == (10, 3)
+        # itertools.combinations order: first subset is the prefix, rows
+        # strictly increasing (the shared argmin-first tiebreak contract)
+        np.testing.assert_array_equal(s[0], [0, 1, 2])
+        assert (np.diff(s, axis=1) > 0).all()
+        # cached identity: both engines index one table
+        assert plan.enumerate_subsets(5, 3) is s
+
+
+class TestJointProperties:
+    """Issue-5 acceptance: never slower than greedy_set; exhaustive joint
+    optimum reached on |N| <= 8 under hungarian pairing."""
+
+    @pytest.mark.parametrize("pairing", ("strong_weak", "adjacent",
+                                         "hungarian", "greedy_matching"))
+    @pytest.mark.parametrize("seed", range(5))
+    def test_never_slower_numpy(self, seed, pairing):
+        env = make_env(500 + seed, 20, CFG3)
+        t_g = schedule_age_noma(env, CFG3, dataclasses.replace(
+            FLCFG, pairing=pairing)).t_round
+        t_j = schedule_age_noma(env, CFG3, dataclasses.replace(
+            FLCFG, pairing=pairing, selection="joint")).t_round
+        assert t_j <= t_g + 1e-12
+
+    @pytest.mark.parametrize("pairing", ("strong_weak", "hungarian"))
+    @pytest.mark.parametrize("seed", range(5))
+    def test_never_slower_engine(self, seed, pairing):
+        """The engine guard picks per batch element: joint t_round is
+        exactly min(joint, greedy) in fp32. (n=16 reuses the pipeline
+        fixtures' compiled shapes — keeps the quick tier fast.)"""
+        env = make_env(600 + seed, 16, CFG3)
+        fl = dataclasses.replace(FLCFG, pairing=pairing)
+        t_g = WirelessEngine(CFG3, fl).schedule(env).t_round
+        t_j = WirelessEngine(CFG3, dataclasses.replace(
+            fl, selection="joint")).schedule(env).t_round
+        assert t_j <= t_g
+
+    @pytest.mark.parametrize("n", (4, 6, 8))
+    @pytest.mark.parametrize("seed", range(5))
+    def test_matches_exhaustive_joint_optimum(self, seed, n):
+        env = make_env(700 + seed * 17 + n, n, CFG2)
+        fl = dataclasses.replace(FLCFG, pairing="hungarian",
+                                 selection="joint")
+        opt = plan.exhaustive_joint_reference(env, CFG2, fl)
+        ref = schedule_age_noma(env, CFG2, fl)
+        assert ref.t_round == pytest.approx(opt, rel=1e-9)
+        out = WirelessEngine(CFG2, fl).schedule(env)
+        assert out.t_round == pytest.approx(opt, rel=RTOL)
+
+    def test_swap_branch_strictly_helps_somewhere(self):
+        """The swap/prune search is not vacuous: over a small sweep it
+        strictly improves at least one instance (N > JOINT_ENUM_MAX_N)."""
+        improved = 0
+        fl = dataclasses.replace(FLCFG, selection="joint")
+        for seed in range(10):
+            env = make_env(800 + seed, 24, CFG3)
+            t_g = schedule_age_noma(env, CFG3, FLCFG).t_round
+            t_j = schedule_age_noma(env, CFG3, fl).t_round
+            if t_j < t_g * (1 - 1e-9):
+                improved += 1
+        assert improved > 0
+
+    def test_selection_validation(self):
+        env = make_env(0, 8, CFG2)
+        with pytest.raises(ValueError, match="selection"):
+            plan.plan_round(env, CFG2, FLCFG,
+                            priority=plan.age_score(env, FLCFG),
+                            selection="bogus")
+        with pytest.raises(ValueError, match="selection"):
+            WirelessEngine(CFG2, dataclasses.replace(
+                FLCFG, selection="bogus"))
+
+
+@pytest.mark.slow
+class TestJointExhaustiveSweep:
+    """Wider exhaustive sweep (every |N| <= 8, odd sizes + wider slots +
+    OMA) — the full acceptance grid."""
+
+    @pytest.mark.parametrize("n", (4, 5, 6, 7, 8))
+    @pytest.mark.parametrize("k", (1, 2))
+    def test_optimum_grid(self, n, k):
+        if 2 * k >= n:
+            pytest.skip("admission not a decision variable")
+        ncfg = NOMAConfig(n_subchannels=k)
+        fl = dataclasses.replace(FLCFG, pairing="hungarian",
+                                 selection="joint")
+        eng = WirelessEngine(ncfg, fl)
+        for seed in range(20):
+            env = make_env(900 + seed, n, ncfg)
+            opt = plan.exhaustive_joint_reference(env, ncfg, fl)
+            ref = schedule_age_noma(env, ncfg, fl)
+            assert ref.t_round == pytest.approx(opt, rel=1e-9)
+            assert eng.schedule(env).t_round == pytest.approx(opt, rel=RTOL)
+
+    @pytest.mark.parametrize("policy", ("random", "round_robin", "channel"))
+    def test_joint_applies_to_non_age_policies(self, policy):
+        """plan_fixed / priority drivers honor selection=joint with the
+        same never-worse guard."""
+        rng = np.random.default_rng(0)
+        for seed in range(5):
+            env = make_env(1000 + seed, 16, CFG3)
+            from repro.core.scheduler import (
+                schedule_channel_greedy,
+                schedule_random,
+                schedule_round_robin,
+            )
+            flj = dataclasses.replace(FLCFG, selection="joint")
+            if policy == "random":
+                r1 = np.random.default_rng(seed)
+                r2 = np.random.default_rng(seed)
+                t_g = schedule_random(r1, env, CFG3, FLCFG).t_round
+                t_j = schedule_random(r2, env, CFG3, flj).t_round
+            elif policy == "round_robin":
+                t_g = schedule_round_robin(seed, env, CFG3, FLCFG).t_round
+                t_j = schedule_round_robin(seed, env, CFG3, flj).t_round
+            else:
+                t_g = schedule_channel_greedy(env, CFG3, FLCFG).t_round
+                t_j = schedule_channel_greedy(env, CFG3, flj).t_round
+            assert t_j <= t_g + 1e-12
+        del rng
