@@ -1,0 +1,122 @@
+"""Admission-mode scaling: drops/sec vs population size N for the two
+admission implementations of the batched JAX engine (core/engine.py).
+
+``full_sort`` ranks the whole population with O(N log^2 N) bitonic passes;
+``segmented`` finds the exact admission threshold with a 32-step bit-space
+bisection and only ever sorts the admitted c = slots candidates (DESIGN.md
+section 9). Both produce bit-for-bit identical schedules (the
+TestAdmissionParity tier pins this), so this benchmark is purely the
+throughput picture behind ``FLConfig.admission = "auto"``'s switch point.
+
+One "drop" = one full joint round on the no-budget fast path. Writes
+``experiments/bench/BENCH_admission_scaling.json`` so CI tracks the
+crossover. ``--smoke`` shrinks sizes for the CI job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+MODES = ("full_sort", "segmented")
+
+
+def bench_case(n, k, drops, *, model_bits=1e6, seed=0, reps=5):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import FLConfig, NOMAConfig
+    from repro.core.engine import WirelessEngine
+    try:
+        from benchmarks.engine_throughput import _make_batch
+    except ImportError:        # run as a bare script from benchmarks/
+        from engine_throughput import _make_batch
+
+    ncfg = NOMAConfig(n_subchannels=k)
+    rng = np.random.default_rng(seed)
+    gains, n_samples, cpu_freq, ages = _make_batch(rng, drops, n, ncfg)
+    eng = WirelessEngine(ncfg, FLConfig())
+    ndev = len(jax.devices())
+    chunk = min(drops, 256 * ndev)
+    while drops % chunk:
+        chunk -= 1
+    chunks = [tuple(jnp.asarray(a[i:i + chunk], jnp.float32)
+                    for a in (gains, n_samples, cpu_freq, ages))
+              + (model_bits,)
+              for i in range(0, drops, chunk)]
+
+    row = {"n": n, "k": k, "drops": drops, "jax_devices": ndev}
+    for mode in MODES:
+        def run():
+            for a in chunks:
+                out = eng.schedule_batch(*a, admission=mode)
+            jax.block_until_ready(out.t_round)
+
+        run()   # compile
+        best = 0.0
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run()
+            best = max(best, drops / (time.perf_counter() - t0))
+        row[f"drops_per_s_{mode}"] = best
+    row["speedup_segmented_vs_full_sort"] = (
+        row["drops_per_s_segmented"] / row["drops_per_s_full_sort"])
+    return row
+
+
+def run(*, smoke=False, out_path=None, seed=0):
+    import jax
+
+    # drops shrink with N so one full_sort column stays a few seconds even
+    # at the bitonic path's worst sizes
+    cases = ([(64, 16, 64), (256, 16, 64)] if smoke
+             else [(256, 64, 256), (1000, 64, 256), (4000, 64, 64),
+                   (16_000, 64, 32)])
+    rows = [bench_case(n, k, drops, seed=seed) for (n, k, drops) in cases]
+    result = {
+        "benchmark": "admission_scaling",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    }
+    out_path = out_path or os.path.join(
+        "experiments", "bench", "BENCH_admission_scaling.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"{'N':>7} {'K':>5} {'full_sort/s':>12} {'segmented/s':>12} "
+          f"{'seg/full':>9}")
+    for r in rows:
+        print(f"{r['n']:>7} {r['k']:>5} "
+              f"{r['drops_per_s_full_sort']:>12.0f} "
+              f"{r['drops_per_s_segmented']:>12.0f} "
+              f"{r['speedup_segmented_vs_full_sort']:>8.2f}x")
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={os.cpu_count()}")
+    main()

@@ -168,17 +168,27 @@ def bench_case(n, k, drops, *, model_bits=1e6, seed=0, reps=5,
 
     row["speedup_jax_vs_numpy"] = (row["drops_per_s_jax"]
                                    / row["drops_per_s_numpy"])
+    from repro.core.plan import resolve_admission
+    row["admission"] = resolve_admission(eng.admission, n,
+                                         min(eng.prm.slots, n))
     return row
 
 
 def run(*, smoke=False, out_path=None, seed=0):
     import jax
 
-    cases = ([(32, 8, 256), (64, 16, 256)] if smoke
-             else [(64, 16, 256), (256, 64, 512), (1000, 128, 512)])
+    # (n, k, drops, per-case overrides); the N >= 1e4 rows cap the serial
+    # numpy column harder (one drop is already ~10ms there) and skip the
+    # interpret-mode pallas column outright
+    cases = ([(32, 8, 256, {}), (64, 16, 256, {})] if smoke
+             else [(64, 16, 256, {}), (256, 64, 512, {}),
+                   (1000, 128, 512, {}),
+                   (10_000, 128, 64, dict(numpy_cap=32, skip_pallas=True)),
+                   (100_000, 128, 16, dict(numpy_cap=16,
+                                           skip_pallas=True))])
     rows = [bench_case(n, k, drops, seed=seed,
-                       pallas_cap=4 if smoke else 8)
-            for (n, k, drops) in cases]
+                       pallas_cap=4 if smoke else 8, **kw)
+            for (n, k, drops, kw) in cases]
     result = {
         "benchmark": "engine_throughput",
         "backend": jax.default_backend(),

@@ -18,6 +18,7 @@ Claim mapping (DESIGN.md section 1):
        kernels             Pallas-kernel micro-benches
        roofline            dry-run derived roofline table
        engine_throughput   batched wireless engine drops/sec vs numpy
+       admission_scaling   full_sort vs segmented admission drops/sec vs N
        scenario_throughput fused vs pre-sampled scenario stepping
 """
 from __future__ import annotations
@@ -29,6 +30,7 @@ import time
 import traceback
 
 from benchmarks import (
+    admission_scaling,
     engine_throughput,
     fairness_age,
     fl_convergence,
@@ -43,6 +45,7 @@ from benchmarks import (
 
 BENCHES = {
     "engine_throughput": lambda quick: engine_throughput.run(smoke=quick),
+    "admission_scaling": lambda quick: admission_scaling.run(smoke=quick),
     "scenario_throughput": lambda quick: scenario_throughput.run(
         smoke=quick),
     "noma_vs_oma": lambda quick: noma_vs_oma.run(

@@ -1,4 +1,5 @@
 from repro.configs.base import (
+    ADMISSIONS,
     ARCH_IDS,
     FLConfig,
     ModelConfig,
@@ -11,6 +12,7 @@ from repro.configs.base import (
 )
 
 __all__ = [
+    "ADMISSIONS",
     "ARCH_IDS",
     "FLConfig",
     "ModelConfig",

@@ -213,6 +213,12 @@ class NOMAConfig:
     sic_order: str = "strong_first"  # uplink SIC: strongest decoded first
 
 
+# engine admission-stage implementations (core/plan.resolve_admission;
+# DESIGN.md section 9). Declared here so FLConfig can validate eagerly
+# without importing core (configs must stay import-leaf).
+ADMISSIONS = ("auto", "full_sort", "segmented")
+
+
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
     n_clients: int = 50
@@ -247,6 +253,15 @@ class FLConfig:
     #               local search above; never slower than greedy_set per
     #               round by construction)
     selection: str = "greedy_set"
+    # admission-stage implementation of the jax engine (core/engine.py,
+    # DESIGN.md section 9) — a pure performance knob, the admitted set is
+    # bit-for-bit identical either way:
+    #   auto        full_sort below plan.ADMISSION_AUTO_N clients,
+    #               segmented at or above (the measured crossover)
+    #   full_sort   population-wide bitonic threshold sorts (small N)
+    #   segmented   exact bit-space threshold search + candidate-only
+    #               sorts, O(N) in the population (large N)
+    admission: str = "auto"
     # wireless environment dynamics (repro.sim registry: static_iid |
     # pedestrian | vehicular | iot_bursty | hotspot_shadowed)
     scenario: str = "static_iid"
@@ -266,6 +281,14 @@ class FLConfig:
     pred_max_age: int = 0            # only predict clients with A_n <= this
                                      # (0 = no staleness cap)
     seed: int = 0
+
+    def __post_init__(self) -> None:
+        # fail at construction, not deep inside a Monte-Carlo sweep — the
+        # engine/planner re-validate their per-call overrides with the
+        # same message shape (no silent fallback anywhere on this axis)
+        if self.admission not in ADMISSIONS:
+            raise ValueError(f"unknown admission mode {self.admission!r} "
+                             f"(expected one of {ADMISSIONS})")
 
 
 # ---------------------------------------------------------------------------

@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import FLConfig, NOMAConfig
+from repro.configs.base import ADMISSIONS, FLConfig, NOMAConfig
 from repro.core import matching
 from repro.core.pairing import ENUM_MAX_PAIRS, PAIRINGS, enumerate_matchings
 from repro.core.plan import (
@@ -57,6 +57,7 @@ from repro.core.plan import (
     RoundEnv,
     Schedule,
     enumerate_subsets,
+    resolve_admission,
 )
 from repro.kernels import pairscore
 
@@ -128,13 +129,15 @@ class EngineSchedule(NamedTuple):
 
 def _bitonic_sort_desc(keys):
     """Descending sort of ``keys`` along the last axis, values only.
-    Pads to a power of two with -inf (sinks to the end)."""
+    Pads to a power of two with -inf / INT_MIN (sinks to the end)."""
     orig = keys.shape[-1]
     m = max(2, 1 << max(orig - 1, 0).bit_length())
     batch = keys.shape[:-1]
     if m != orig:
+        pad = (-jnp.inf if jnp.issubdtype(keys.dtype, jnp.floating)
+               else jnp.iinfo(keys.dtype).min)
         keys = jnp.pad(keys, [(0, 0)] * len(batch) + [(0, m - orig)],
-                       constant_values=-jnp.inf)
+                       constant_values=pad)
     pos = jnp.arange(m, dtype=jnp.int32)
     k = 2
     while k <= m:
@@ -279,13 +282,32 @@ def _completion_table(g_sorted, t_cmp_sorted, model_bits, prm: EngineParams,
 
 
 def _sw_completion(mask, gains, t_cmp, model_bits, prm: EngineParams,
-                   oma: bool, c: int):
+                   oma: bool, c: int, segmented: bool = False):
     """Strong_weak completion of the ``c``-member sets in ``mask``
     (jax twin of ``plan.sw_completion``): returns (t_round (B,),
-    per-rank completions (B, c), member client ids by rank (B, c))."""
+    per-rank completions (B, c), member client ids by rank (B, c)).
+
+    ``segmented=True`` (the segmented admission path, requires exactly
+    ``c`` members per row and c < n) compacts the mask to (B, c) first and
+    argsorts only that — identical results (``comp`` ascends in client
+    index, so slot-stable == index-stable), without the (B, n) sort."""
     n0b, pmax, bw = prm.noise_power_w, prm.max_power_w, prm.bandwidth_hz
-    sg, sidx = _bitonic_argsort_desc(jnp.where(mask, gains, -jnp.inf))
-    sg, sidx = sg[:, :c], sidx[:, :c]
+    if segmented:
+        b, n = gains.shape
+        cposc = jnp.cumsum(mask.astype(jnp.int32), axis=1)
+        targets = jnp.broadcast_to(
+            jnp.arange(1, c + 1, dtype=jnp.int32), (b, c))
+        span = jnp.arange(c, dtype=jnp.int32)
+        comp = _lower_bound(cposc, targets,
+                            lo=jnp.broadcast_to(span, (b, c)),
+                            hi=jnp.broadcast_to(span + (n - c), (b, c)),
+                            width=n - c)
+        sg, sidx_c = _bitonic_argsort_desc(
+            jnp.take_along_axis(gains, comp, axis=1))
+        sidx = jnp.take_along_axis(comp, sidx_c, axis=1)
+    else:
+        sg, sidx = _bitonic_argsort_desc(jnp.where(mask, gains, -jnp.inf))
+        sg, sidx = sg[:, :c], sidx[:, :c]
     tc = jnp.take_along_axis(t_cmp, sidx, axis=1)
     odd = c % 2
     cp = c - odd
@@ -343,7 +365,7 @@ def _joint_enum_mask(gains, t_cmp, model_bits, prm: EngineParams, oma: bool,
 
 
 def _joint_swap_mask(cand, gains, t_cmp, model_bits, prm: EngineParams,
-                     oma: bool, c: int):
+                     oma: bool, c: int, segmented: bool = False):
     """Swap/prune local search from the greedy admission (jax twin of
     ``plan._swap_search``): JOINT_SWAP_ITERS unrolled iterations, each
     swapping the bottleneck member for the non-member with the best solo
@@ -357,7 +379,7 @@ def _joint_swap_mask(cand, gains, t_cmp, model_bits, prm: EngineParams,
                                  bw=prm.bandwidth_hz), 1e-9)
     mask = cand
     cur_t, comp, sidx = _sw_completion(mask, gains, t_cmp, model_bits, prm,
-                                       oma, c)
+                                       oma, c, segmented)
     for _ in range(JOINT_SWAP_ITERS):
         bneck = jnp.take_along_axis(sidx, jnp.argmax(comp, axis=1)[:, None],
                                     axis=1)[:, 0]
@@ -365,7 +387,7 @@ def _joint_swap_mask(cand, gains, t_cmp, model_bits, prm: EngineParams,
         new_mask = (mask.at[rows, bneck].set(False)
                     .at[rows, incoming].set(True))
         new_t, new_comp, new_sidx = _sw_completion(
-            new_mask, gains, t_cmp, model_bits, prm, oma, c)
+            new_mask, gains, t_cmp, model_bits, prm, oma, c, segmented)
         imp = new_t < cur_t
         mask = jnp.where(imp[:, None], new_mask, mask)
         comp = jnp.where(imp[:, None], new_comp, comp)
@@ -375,11 +397,13 @@ def _joint_swap_mask(cand, gains, t_cmp, model_bits, prm: EngineParams,
 
 
 def _joint_refine_mask(cand, gains, t_cmp, model_bits, prm: EngineParams,
-                       oma: bool, n_cand0: int):
+                       oma: bool, n_cand0: int, segmented: bool = False):
     """Joint (pairing-aware) admission twin of ``plan.joint_admission`` —
     WITHOUT the realized-time guard: callers evaluate both masks through
     the shared finish stage and keep the strictly faster schedule
-    (``_pick_faster``), which is exactly the plan.py guard."""
+    (``_pick_faster``), which is exactly the plan.py guard.
+    ``segmented`` routes the swap search's set evaluations through the
+    compacted ``_sw_completion`` (no full-population sorts)."""
     n = gains.shape[-1]
     if n_cand0 < 1 or n_cand0 >= n:
         return cand
@@ -387,7 +411,7 @@ def _joint_refine_mask(cand, gains, t_cmp, model_bits, prm: EngineParams,
         return _joint_enum_mask(gains, t_cmp, model_bits, prm, oma, n,
                                 n_cand0)
     return _joint_swap_mask(cand, gains, t_cmp, model_bits, prm, oma,
-                            n_cand0)
+                            n_cand0, segmented)
 
 
 def _pick_faster(a: EngineSchedule, b: EngineSchedule) -> EngineSchedule:
@@ -450,6 +474,97 @@ def _admit_fast(priority, gains, n_cand0: int):
     return gt | ggt | (geq & (geq_rank <= need - n_ggt))  # exactly c
 
 
+# ---------------------------------------------------------------------------
+# segmented admission (FLConfig.admission = "segmented")
+#
+# The full_sort admission above still sorts the whole population (two
+# n/2-wide bitonic halves), so its cost grows n log^2 n while the answer
+# only needs the c-th largest priority. The segmented path finds that
+# threshold EXACTLY by binary search in uint32 bit space: the IEEE-754
+# order-preserving float->uint bijection makes "count(priority >= mid)"
+# monotone in mid, so 32 compare+popcount passes (each a cheap O(n)
+# elementwise reduction that XLA fuses) pin the exact c-th largest value —
+# no slack, no refine loop, no approximation. Ties at the threshold resolve
+# by the same second gains pass as full_sort, so the admitted set is
+# bit-for-bit the (priority desc, gain desc, index asc) top-c of
+# ``plan.admission_order``. DESIGN.md section 9.
+# ---------------------------------------------------------------------------
+
+# target rows*clients per scan sub-chunk on the segmented path: the O(n)
+# count passes are memory-bound, so walking the batch in ~L2-sized slices
+# inside one jitted lax.scan roughly doubles throughput at n=1000 vs one
+# flat (256, n) chunk (measured; DESIGN.md section 9.3)
+ADMISSION_SCAN_ELEMS = 32768
+
+
+def _f2u(x):
+    """Order-preserving fp32 -> uint32 bijection: flip the sign bit on
+    non-negatives, all bits on negatives. ``x + 0.0`` canonicalizes -0.0 to
+    +0.0 first so uint order matches float total order on every input."""
+    x = x + 0.0
+    b = jax.lax.bitcast_convert_type(x, jnp.int32)
+    return jnp.where(b < 0, jnp.invert(b),
+                     b ^ jnp.int32(-2147483648)).astype(jnp.uint32)
+
+
+def _kth_largest_u32(s, k):
+    """Exact per-row k-th largest of uint32 ``s`` (…, n) by bit-space binary
+    search; ``k`` is a static int or traced (…, 1) int32 (the tied-gain pass
+    queries a different k per row). 32 fused count passes, no sort."""
+    shp = s.shape[:-1] + (1,)
+    k = jnp.broadcast_to(jnp.asarray(k, jnp.int32), shp)
+    lo = jnp.zeros(shp, jnp.uint32)
+    hi = jnp.full(shp, 0xFFFFFFFF, jnp.uint32)
+    for _ in range(32):
+        d = hi - lo
+        mid = lo + d // 2 + (d & 1)      # upper mid: lo can sit at the answer
+        cnt = jnp.sum((s >= mid).astype(jnp.int32), -1, keepdims=True)
+        ge = cnt >= k
+        lo = jnp.where(ge, mid, lo)
+        hi = jnp.where(ge, hi, mid - 1)
+    return lo
+
+
+def _admit_fast_seg(priority, gains, n_cand0: int):
+    """Segmented twin of ``_admit_fast``: identical admitted mask (the same
+    lexicographic tiebreak contract), but the two thresholds come from
+    ``_kth_largest_u32`` bit-space searches instead of population sorts —
+    O(n) per pass, so the admission cost stops growing with sort depth.
+    The gains tiebreak pass is skipped entirely (``lax.cond``) in the
+    almost-sure case where no tie straddles the threshold."""
+    b, n = gains.shape
+    c = n_cand0
+    if c >= n:
+        return jnp.ones((b, n), bool)
+    su = _f2u(priority)
+    thr = _kth_largest_u32(su, c)
+    gt = su > thr
+    eq = su == thr
+    n_gt = jnp.sum(gt, axis=1, keepdims=True)
+    need = c - n_gt                       # >= 1: at most c-1 exceed the kth
+    n_eq = jnp.sum(eq, axis=1, keepdims=True)
+
+    def no_ties(_):
+        # exactly ``need`` clients sit at the threshold in every row: the
+        # admitted set is closed under priority equality, no gain pass
+        return gt | eq
+
+    def with_ties(_):
+        # ties straddle the threshold somewhere: rank the tied clients'
+        # gains by a second bit-space search (excluded rows get key 0 —
+        # strictly below any real _f2u image of a positive gain), then
+        # index ascending via cumsum over the residual exact gain ties
+        gu = jnp.where(eq, _f2u(gains), jnp.uint32(0))
+        gthr = _kth_largest_u32(gu, need)
+        ggt = eq & (gu > gthr)
+        geq = eq & (gu == gthr)
+        n_ggt = jnp.sum(ggt, axis=1, keepdims=True)
+        geq_rank = jnp.cumsum(geq.astype(jnp.int32), axis=1)
+        return gt | ggt | (geq & (geq_rank <= need - n_ggt))
+
+    return jax.lax.cond(jnp.all(n_eq == need), no_ties, with_ties, None)
+
+
 def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
                  prm: EngineParams, oma: bool, n_pairs: int,
                  n_cand0: int, pairing_policy: str = "strong_weak"
@@ -476,11 +591,52 @@ def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
                         width=n - c)                     # candidate ids
     g_c = jnp.take_along_axis(gains, comp, axis=1)
 
-    # --- pairing: stable descending gain argsort of the candidates --------
-    sg_c, sidx_c = _bitonic_argsort_desc(g_c)
-    sid_c = jnp.take_along_axis(comp, sidx_c, axis=1)    # client id by rank
-    t_cmp_srt = jnp.take_along_axis(
-        jnp.take_along_axis(t_cmp, comp, axis=1), sidx_c, axis=1)
+    # --- candidate ordering: values-only descending gain sort, then each
+    # slot's rank q by a short binary search into the sorted row. The
+    # 1-plane sort is ~2x cheaper than the fused 2-plane argsort; exact
+    # gain ties (measure-zero under continuous fading) would make the
+    # rank search ambiguous, so a lax.cond falls back to the argsort
+    # inverse (stable by slot == by client index, the plan.py contract)
+    # only when some row of the chunk actually has a tie ------------------
+    sg_c = _bitonic_sort_desc(g_c)
+
+    def _distinct_q(_):
+        lo = jnp.zeros((b, c), jnp.int32)
+        hi = jnp.full((b, c), c, jnp.int32)
+        for _ in range(int(c).bit_length()):
+            mid = (lo + hi) // 2
+            v = jnp.take_along_axis(sg_c, jnp.clip(mid, 0, c - 1), axis=1)
+            gtm = v > g_c
+            lo = jnp.where(gtm, mid + 1, lo)
+            hi = jnp.where(gtm, hi, mid)
+        return lo
+
+    def _tied_q(_):
+        _, sidx_c = _bitonic_argsort_desc(g_c)
+        # permutation inverse via one packed-int sort: (slot << bits | rank)
+        # ascending in slot leaves each slot's rank in the low bits
+        mbits = max(c - 1, 1).bit_length()
+        rank = jnp.arange(c, dtype=jnp.int32)
+        packed = (sidx_c << mbits) | rank
+        return (-_bitonic_sort_desc(-packed)) & ((1 << mbits) - 1)
+
+    if c > 1:
+        ties = jnp.any(sg_c[:, :-1] == sg_c[:, 1:])
+        q = jax.lax.cond(ties, _tied_q, _distinct_q, None)
+    else:
+        q = jnp.zeros((b, c), jnp.int32)
+
+    # client id by rank (the pair tables' payload): invert q with one more
+    # packed-int sort — (rank << bits | client id) ascending in rank. Falls
+    # back to the fused argsort when the packing would overflow int31
+    # (c and N both huge; never at the paper's slot counts)
+    pbits = max(n - 1, 1).bit_length()
+    if ((c - 1) << pbits) | (n - 1) < 2 ** 31:
+        packed2 = (q << pbits) | comp
+        sid_c = (-_bitonic_sort_desc(-packed2)) & ((1 << pbits) - 1)
+    else:
+        _, sidx_c = _bitonic_argsort_desc(g_c)
+        sid_c = jnp.take_along_axis(comp, sidx_c, axis=1)
 
     # --- rates/powers in SORTED space under the pairing policy (DESIGN.md
     # section 7). strong_weak keeps the original pure-slice construction
@@ -520,6 +676,7 @@ def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
             # full sorted-rank completion table: the [0:m, m:] half-split
             # slice is the assignment cost, the whole table feeds the
             # bottleneck 2-opt + the never-slower guard (DESIGN.md 7.2)
+            t_cmp_srt = jnp.take_along_axis(t_cmp, sid_c, axis=1)
             table = _completion_table(sg_c[:, :c_pair],
                                       t_cmp_srt[:, :c_pair], model_bits,
                                       prm, oma)
@@ -570,21 +727,25 @@ def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
         pow_srt = jnp.concatenate(
             [pow_srt, jnp.full((b, 1), pmax, rate_srt.dtype)], axis=1)
 
-    # --- round time in sorted space (the compact slots ARE the selected
-    # set). A consumer that only reads t_round/selected — the Monte-Carlo
-    # sweep — lets XLA prune the rank inverse + client-space gathers below.
-    tot_srt = t_cmp_srt + model_bits[:, None] / jnp.maximum(rate_srt, 1e-9)
-    t_round = jnp.max(tot_srt, axis=1)
+    # --- back to candidate space: ride rate and power through the gathers
+    # as ONE complex64 plane (real=rate, imag=power — exact: the parts are
+    # stored fp32 verbatim), halving the gather count. Round time reduces
+    # over candidate space (max is order-free), so the sorted-space t_cmp
+    # gather never materializes; a consumer that only reads
+    # t_round/selected — the Monte-Carlo sweep — lets XLA prune the
+    # client-space slot gathers below.
+    rp_srt = jax.lax.complex(rate_srt, pow_srt)
+    rp_c = jnp.take_along_axis(rp_srt, q, axis=1)
+    rate_c = jnp.real(rp_c)
+    t_cmp_c = jnp.take_along_axis(t_cmp, comp, axis=1)
+    tot_c = t_cmp_c + model_bits[:, None] / jnp.maximum(rate_c, 1e-9)
+    t_round = jnp.max(tot_c, axis=1)
 
-    # --- back to client space: rank inverse + gathers ----------------------
-    q = _lex_rank_desc(sg_c, sidx_c.astype(g_c.dtype), g_c,
-                       jnp.broadcast_to(
-                           jnp.arange(c, dtype=g_c.dtype), (b, c)))
-    rate_c = jnp.take_along_axis(rate_srt, q, axis=1)
-    pow_c = jnp.take_along_axis(pow_srt, q, axis=1)
+    # --- back to client space: one slot gather ----------------------------
     slot = jnp.clip(cposc - 1, 0, c - 1)
-    rates = jnp.where(cand, jnp.take_along_axis(rate_c, slot, axis=1), 0.0)
-    powers = jnp.where(cand, jnp.take_along_axis(pow_c, slot, axis=1), 0.0)
+    rp = jnp.take_along_axis(rp_c, slot, axis=1)
+    rates = jnp.where(cand, jnp.real(rp), 0.0)
+    powers = jnp.where(cand, jnp.imag(rp), 0.0)
     t_com = model_bits[:, None] / jnp.maximum(rates, 1e-9)
     w = n_samples * cand
     w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
@@ -610,34 +771,71 @@ def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
 def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
                          prm: EngineParams, oma: bool, n_pairs: int,
                          n_cand0: int, pairing_policy: str = "strong_weak",
-                         selection: str = "greedy_set") -> EngineSchedule:
+                         selection: str = "greedy_set",
+                         admission: str = "full_sort") -> EngineSchedule:
     """Staged fast path: greedy admission -> finish; ``selection="joint"``
     additionally refines the admitted set (``_joint_refine_mask``) and
     keeps the refined schedule only where strictly faster (the plan.py
-    never-worse guard, realized under the active pairing policy)."""
-    cand = _admit_fast(priority, gains, n_cand0)
+    never-worse guard, realized under the active pairing policy).
+    ``admission`` picks the resolved stage-2 implementation ("full_sort" |
+    "segmented" — same mask bit-for-bit, DESIGN.md section 9)."""
+    seg = admission == "segmented"
+    admit = _admit_fast_seg if seg else _admit_fast
+    cand = admit(priority, gains, n_cand0)
     out = _fast_finish(cand, gains, t_cmp, n_samples, model_bits, prm, oma,
                        n_pairs, n_cand0, pairing_policy)
     if selection == "joint" and 0 < n_cand0 < gains.shape[-1]:
         refined = _joint_refine_mask(cand, gains, t_cmp, model_bits, prm,
-                                     oma, n_cand0)
+                                     oma, n_cand0, segmented=seg)
         out = _pick_faster(
             _fast_finish(refined, gains, t_cmp, n_samples, model_bits, prm,
                          oma, n_pairs, n_cand0, pairing_policy), out)
     return out
 
 
+def _seg_subchunk(b: int, n: int) -> int:
+    """Rows per lax.scan sub-chunk on the segmented path (0 = no scan):
+    largest divisor of ``b`` with ~ADMISSION_SCAN_ELEMS row elements, so
+    the O(n) count passes stay cache-resident instead of streaming the
+    whole (B, n) batch through memory once per pass."""
+    target = max(1, ADMISSION_SCAN_ELEMS // max(n, 1))
+    if target >= b:
+        return 0
+    sub = 1
+    for d in range(2, target + 1):
+        if b % d == 0:
+            sub = d
+    return sub
+
+
+def _scan_subchunks(step, arrays, b: int, sub: int):
+    """Run ``step(*row_chunk)`` over (b // sub)-many ``sub``-row slices of
+    ``arrays`` inside one ``lax.scan``, re-flattening the stacked outputs
+    (bit-identical to one flat call: every op in the step is row-wise)."""
+    xs = tuple(a.reshape((b // sub, sub) + a.shape[1:]) for a in arrays)
+    _, out = jax.lax.scan(lambda carry, x: (carry, step(*x)), 0, xs)
+    return jax.tree.map(lambda o: o.reshape((-1,) + o.shape[2:]), out)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("prm", "oma", "n_pairs", "n_cand0",
-                                    "pairing", "selection"))
+                                    "pairing", "selection", "admission"))
 def _fast_schedule_batch_core(priority, gains, t_cmp, n_samples, model_bits,
                               *, prm: EngineParams, oma: bool, n_pairs: int,
                               n_cand0: int, pairing: str = "strong_weak",
-                              selection: str = "greedy_set"
+                              selection: str = "greedy_set",
+                              admission: str = "full_sort"
                               ) -> EngineSchedule:
-    return _fast_schedule_batch(priority, gains, t_cmp, n_samples,
-                                model_bits, prm, oma, n_pairs, n_cand0,
-                                pairing, selection)
+    def step(p, g, tc, ns, mb):
+        return _fast_schedule_batch(p, g, tc, ns, mb, prm, oma, n_pairs,
+                                    n_cand0, pairing, selection, admission)
+
+    b, n = gains.shape
+    sub = _seg_subchunk(b, n) if admission == "segmented" else 0
+    if sub:
+        return _scan_subchunks(
+            step, (priority, gains, t_cmp, n_samples, model_bits), b, sub)
+    return step(priority, gains, t_cmp, n_samples, model_bits)
 
 
 def _age_priority(ages, n_samples, gains, gamma: float):
@@ -648,7 +846,10 @@ def _age_priority(ages, n_samples, gains, gamma: float):
     increment ~1e-22, absorbed next to O(0.01-1) priorities)."""
     del gains  # tiebreak handled lexicographically by the selection cores
     w = n_samples / jnp.sum(n_samples, axis=-1, keepdims=True)
-    return ages.astype(jnp.float32) ** gamma * w
+    a = ages.astype(jnp.float32)
+    if gamma != 1.0:       # static: skip the pow at the paper's gamma=1
+        a = a ** gamma
+    return a * w
 
 
 def round_robin_priority(round_idx, n: int, n_window: int):
@@ -669,19 +870,31 @@ def _compute_times(prm: EngineParams, n_samples, cpu_freq):
 
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "oma",
                                              "n_pairs", "n_cand0",
-                                             "pairing", "selection"))
+                                             "pairing", "selection",
+                                             "admission"))
 def _fast_from_env_core(gains, n_samples, cpu_freq, ages, model_bits, *,
                         prm: EngineParams, gamma: float, oma: bool,
                         n_pairs: int, n_cand0: int,
                         pairing: str = "strong_weak",
-                        selection: str = "greedy_set") -> EngineSchedule:
+                        selection: str = "greedy_set",
+                        admission: str = "full_sort") -> EngineSchedule:
     """Age-priority preamble fused with the fast path: one dispatch per
-    batch (the eager preamble otherwise costs several ms on CPU)."""
-    priority = _age_priority(ages, n_samples, gains, gamma)
-    t_cmp = _compute_times(prm, n_samples, cpu_freq)
-    return _fast_schedule_batch(priority, gains, t_cmp, n_samples,
-                                model_bits, prm, oma, n_pairs, n_cand0,
-                                pairing, selection)
+    batch (the eager preamble otherwise costs several ms on CPU). On the
+    segmented path the preamble rides inside the cache-blocked sub-chunk
+    scan (every op is row-wise)."""
+    def step(g, ns, cf, ag, mb):
+        priority = _age_priority(ag, ns, g, gamma)
+        t_cmp = _compute_times(prm, ns, cf)
+        return _fast_schedule_batch(priority, g, t_cmp, ns, mb, prm, oma,
+                                    n_pairs, n_cand0, pairing, selection,
+                                    admission)
+
+    b, n = gains.shape
+    sub = _seg_subchunk(b, n) if admission == "segmented" else 0
+    if sub:
+        return _scan_subchunks(
+            step, (gains, n_samples, cpu_freq, ages, model_bits), b, sub)
+    return step(gains, n_samples, cpu_freq, ages, model_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -962,7 +1175,8 @@ class WirelessEngine:
                  use_pallas: bool = False,
                  pallas_impl: Optional[str] = None,
                  pairing: Optional[str] = None,
-                 selection: Optional[str] = None):
+                 selection: Optional[str] = None,
+                 admission: Optional[str] = None):
         self.ncfg = ncfg
         self.flcfg = flcfg
         self.prm = EngineParams.from_configs(ncfg, flcfg)
@@ -975,6 +1189,11 @@ class WirelessEngine:
         if self.selection not in SELECTIONS:
             raise ValueError(f"unknown selection mode {self.selection!r} "
                              f"(expected one of {SELECTIONS})")
+        self.admission = (flcfg.admission if admission is None
+                          else admission)
+        if self.admission not in ADMISSIONS:
+            raise ValueError(f"unknown admission mode {self.admission!r} "
+                             f"(expected one of {ADMISSIONS})")
         self.use_pallas = use_pallas
         if pallas_impl is None:
             pallas_impl = ("pallas" if jax.default_backend() == "tpu"
@@ -1014,16 +1233,20 @@ class WirelessEngine:
                        *, t_budget=0.0, oma: bool = False,
                        priority=None, shard: bool = False,
                        pairing: Optional[str] = None,
-                       selection: Optional[str] = None) -> EngineSchedule:
+                       selection: Optional[str] = None,
+                       admission: Optional[str] = None) -> EngineSchedule:
         """Vmapped joint round over a batch of envs.
 
         gains/n_samples/cpu_freq/ages: (B, N); model_bits/t_budget: scalar
         or (B,). ``priority=None`` uses the paper's age priority.
         ``pairing`` overrides the engine's subchannel pairing policy
         (``FLConfig.pairing``; core/pairing.py); ``selection`` overrides
-        the admission mode (``FLConfig.selection``; core/plan.py —
+        the selection mode (``FLConfig.selection``; core/plan.py —
         ``joint`` refines the greedy set pairing-aware with a never-worse
-        guard).
+        guard); ``admission`` overrides the admission implementation
+        (``FLConfig.admission``: auto | full_sort | segmented — resolved
+        per batch shape by ``plan.resolve_admission``, identical schedules
+        either way).
 
         When ``t_budget`` is a plain scalar <= 0 (no budget, the Monte-Carlo
         default) the admission count is static and the scatter/sort-free
@@ -1060,6 +1283,8 @@ class WirelessEngine:
         if selection not in SELECTIONS:
             raise ValueError(f"unknown selection mode {selection!r} "
                              f"(expected one of {SELECTIONS})")
+        admission = resolve_admission(
+            self.admission if admission is None else admission, n, n_cand0)
         no_budget = (isinstance(t_budget, (int, float))
                      and float(t_budget) <= 0.0)
         if no_budget and priority is None:
@@ -1068,7 +1293,7 @@ class WirelessEngine:
                 gains, n_samples, jnp.asarray(cpu_freq, jnp.float32), ages,
                 model_bits, prm=self.prm, gamma=self.flcfg.age_exponent,
                 oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing,
-                selection=selection)
+                selection=selection, admission=admission)
         elif no_budget:
             priority = jnp.asarray(priority, jnp.float32)
             t_cmp = self.compute_times(n_samples,
@@ -1076,7 +1301,7 @@ class WirelessEngine:
             out = _fast_schedule_batch_core(
                 priority, gains, t_cmp, n_samples, model_bits, prm=self.prm,
                 oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing,
-                selection=selection)
+                selection=selection, admission=admission)
         else:
             if priority is None:
                 priority = self.age_priority(ages, n_samples, gains)
@@ -1125,7 +1350,8 @@ class WirelessEngine:
                           *, policy: str = "age_noma", t_budget: float = 0.0,
                           seed: int = 0, shard: bool = False,
                           pairing: Optional[str] = None,
-                          selection: Optional[str] = None):
+                          selection: Optional[str] = None,
+                          admission: Optional[str] = None):
         """Roll the AoU state machine over R rounds for S seeds, one batched
         step per round: gains_seq (R, S, N); n_samples/cpu_freq either
         (S, N) static or (R, S, N) per-round (the scenario ``presampled=``
@@ -1159,14 +1385,15 @@ class WirelessEngine:
 
         return self._mc_loop(env_fn, r, model_bits, policy=policy,
                              t_budget=t_budget, seed=seed, pairing=pairing,
-                             selection=selection)
+                             selection=selection, admission=admission)
 
     def montecarlo_scenario(self, scenario, *, rounds: int, n_seeds: int,
                             n_clients: int, model_bits,
                             policy: str = "age_noma", t_budget: float = 0.0,
                             seed: int = 0, key=None, shard: bool = False,
                             pairing: Optional[str] = None,
-                            selection: Optional[str] = None):
+                            selection: Optional[str] = None,
+                            admission: Optional[str] = None):
         """Fully fused Monte-Carlo: the scenario's ``step(state, key) ->
         (state, env)`` transition advances the wireless environment on
         device between scheduled rounds — no host-side R x S x N gains
@@ -1201,12 +1428,13 @@ class WirelessEngine:
 
         return self._mc_loop(env_fn, rounds, model_bits, policy=policy,
                              t_budget=t_budget, seed=seed, pairing=pairing,
-                             selection=selection)
+                             selection=selection, admission=admission)
 
     def _mc_loop(self, env_fn, rounds: int, model_bits, *, policy: str,
                  t_budget: float, seed: int,
                  pairing: Optional[str] = None,
-                 selection: Optional[str] = None):
+                 selection: Optional[str] = None,
+                 admission: Optional[str] = None):
         """R-round rollout: a Python loop of jitted per-round steps rather
         than ``lax.scan`` — on CPU the XLA while-loop runs the identical
         body ~1.7x slower than back-to-back jit dispatches. ``env_fn(i)``
@@ -1217,6 +1445,7 @@ class WirelessEngine:
         if selection not in SELECTIONS:
             raise ValueError(f"unknown selection mode {selection!r} "
                              f"(expected one of {SELECTIONS})")
+        admission = self.admission if admission is None else admission
         keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
         mb = jnp.asarray(model_bits, jnp.float32)
         ages = part = None
@@ -1227,6 +1456,7 @@ class WirelessEngine:
                 s, n = gains.shape
                 n_cand0 = min(self.prm.slots, n)
                 n_pairs = max((n_cand0 + 1) // 2, 1)
+                admission = resolve_admission(admission, n, n_cand0)
                 ages = jnp.ones((s, n), jnp.float32)
                 part = jnp.zeros((s, n), jnp.float32)
             ages, part, t_round, n_sel, max_age = _montecarlo_step(
@@ -1234,7 +1464,7 @@ class WirelessEngine:
                 jnp.asarray(i, jnp.int32),
                 prm=self.prm, gamma=self.flcfg.age_exponent, policy=policy,
                 t_budget=float(t_budget), n_pairs=n_pairs, n_cand0=n_cand0,
-                pairing=pairing, selection=selection,
+                pairing=pairing, selection=selection, admission=admission,
                 pallas_impl=self.pallas_impl if self.use_pallas else None)
             t_rounds.append(t_round)
             n_sels.append(n_sel)
@@ -1248,13 +1478,15 @@ class WirelessEngine:
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "policy",
                                              "t_budget", "n_pairs",
                                              "n_cand0", "pairing",
-                                             "selection", "pallas_impl"))
+                                             "selection", "admission",
+                                             "pallas_impl"))
 def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
                      model_bits, round_idx, *, prm: EngineParams,
                      gamma: float, policy: str, t_budget: float,
                      n_pairs: int, n_cand0: int,
                      pairing: str = "strong_weak",
                      selection: str = "greedy_set",
+                     admission: str = "full_sort",
                      pallas_impl: Optional[str] = None):
     """One Monte-Carlo round over all seeds; every policy in
     ``fl.rounds.POLICIES`` resolves to a priority vector here
@@ -1277,9 +1509,17 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
     else:
         raise ValueError(f"unknown montecarlo policy {policy!r}")
     if t_budget <= 0.0:
-        sched = _fast_schedule_batch(prio, gains, t_cmp, n_samples, mb,
-                                     prm, oma, n_pairs, n_cand0, pairing,
-                                     selection)
+        def step(p, g, tc, ns, mbx):
+            return _fast_schedule_batch(p, g, tc, ns, mbx, prm, oma,
+                                        n_pairs, n_cand0, pairing,
+                                        selection, admission)
+
+        sub = _seg_subchunk(s, n) if admission == "segmented" else 0
+        if sub:
+            sched = _scan_subchunks(
+                step, (prio, gains, t_cmp, n_samples, mb), s, sub)
+        else:
+            sched = step(prio, gains, t_cmp, n_samples, mb)
     else:
         tb = jnp.full((s,), t_budget, jnp.float32)
         one = functools.partial(_schedule_one, prm=prm, oma=oma,

@@ -54,10 +54,31 @@ from typing import Optional
 
 import numpy as np
 
-from repro.configs.base import FLConfig, NOMAConfig
+from repro.configs.base import ADMISSIONS, FLConfig, NOMAConfig
 from repro.core import aoi, noma, pairing, roundtime
 
 SELECTIONS = ("greedy_set", "joint")
+
+# FLConfig.admission = "auto" picks the engine's admission implementation
+# by population size: below this many clients the two full_sort bitonic
+# half-sorts are cheap enough that the threshold-search constant factor —
+# 32 count passes — is not worth paying; from here up the segmented
+# path's O(N) passes win and keep winning (BENCH_admission_scaling on
+# CPU: ~1.3x at N=256 growing to ~7x at N=16000; the admitted set is
+# bit-for-bit identical either way — DESIGN.md section 9)
+ADMISSION_AUTO_N = 256
+
+
+def resolve_admission(mode: str, n: int, c: int) -> str:
+    """Resolve an ``FLConfig.admission`` mode to the concrete stage-2
+    implementation for an (N clients, c slots) instance. Explicit modes
+    pass through (never silently overridden); unknown modes raise."""
+    if mode not in ADMISSIONS:
+        raise ValueError(f"unknown admission mode {mode!r} "
+                         f"(expected one of {ADMISSIONS})")
+    if mode != "auto":
+        return mode
+    return "segmented" if n >= ADMISSION_AUTO_N else "full_sort"
 
 # n <= this: joint admission enumerates ALL C(n, c) candidate sets x all
 # matchings (the exhaustive joint optimum the C4-style reference checks);

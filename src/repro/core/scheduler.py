@@ -21,6 +21,7 @@ from repro.core.plan import (  # noqa: F401  (re-exported API)
     Schedule,
     exhaustive_joint_reference,
     exhaustive_pairing_reference,
+    resolve_admission,
 )
 
 

@@ -69,7 +69,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
                    scenario: str | object = "static_iid",
                    presampled: bool = False, shard: bool = False,
                    pairing: Optional[str] = None,
-                   selection: Optional[str] = None) -> dict:
+                   selection: Optional[str] = None,
+                   admission: Optional[str] = None) -> dict:
     """Wireless-layer Monte-Carlo: compare selection/RA policies over
     ``n_seeds`` independent environment realizations x ``rounds``, one
     batched engine call per round.
@@ -99,11 +100,14 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
 
     nomacfg = nomacfg or NOMAConfig()
     flcfg = flcfg or FLConfig()
-    # subchannel pairing policy + admitted-set selection mode: every
-    # POLICY x scenario sweep can run any (pairing, selection) combination
-    # (core/pairing.py, core/plan.py; threaded through the fused MC step)
+    # subchannel pairing policy + admitted-set selection mode + admission
+    # implementation: every POLICY x scenario sweep can run any (pairing,
+    # selection, admission) combination (core/pairing.py, core/plan.py;
+    # threaded through the fused MC step — an unknown admission value
+    # raises in the engine constructor, never a silent fallback)
     eng = WirelessEngine(nomacfg, flcfg, use_pallas=use_pallas,
-                         pairing=pairing, selection=selection)
+                         pairing=pairing, selection=selection,
+                         admission=admission)
     scn = as_scenario(scenario, nomacfg, flcfg)
     s, n, r = n_seeds, n_clients, rounds
     k_env = jax.random.PRNGKey(seed)
@@ -123,7 +127,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
         "model_bits": model_bits, "t_budget": t_budget,
         "scenario": scn.name, "presampled": bool(presampled),
         "slots": eng.prm.slots, "use_pallas": use_pallas,
-        "pairing": eng.pairing, "selection": eng.selection}}
+        "pairing": eng.pairing, "selection": eng.selection,
+        "admission": eng.admission}}
     for policy in policies:
         tb = t_budget
         if policy == "age_noma_budget" and tb <= 0.0:

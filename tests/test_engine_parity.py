@@ -177,6 +177,7 @@ class TestPairingPolicyParity:
         ref = schedule_age_noma(env, CFG_SMALL, flp, oma=True)
         assert_parity(ref, eng.schedule(env, oma=True))
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("pairing", ["strong_weak", "hungarian"])
     def test_wide_slots_matches_numpy(self, pairing):
         """m > 3 exercises the assignment + multi-start 2-opt path."""

@@ -49,6 +49,7 @@ class TestFedAgg:
 class TestPairScore:
     KW = dict(n0b=1e-14, pmax=0.2, bw=1e6)
 
+    @pytest.mark.slow
     @given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
     @settings(max_examples=10, deadline=None)
     def test_kernel_matches_xla_twin(self, m, seed):

@@ -191,6 +191,7 @@ class TestTwoOpt:
         assert np.all(a < b)
         assert table[a, b].max() <= table[a0, b0].max() + 1e-12
 
+    @pytest.mark.slow
     @given(st.integers(2, 5), st.integers(0, 2 ** 32 - 1))
     @settings(max_examples=15, deadline=None)
     def test_jax_refine_matches_numpy(self, m, seed):
@@ -208,6 +209,7 @@ class TestTwoOpt:
 
 
 class TestMonteCarloPairing:
+    @pytest.mark.slow
     def test_run_montecarlo_accepts_pairing(self):
         """Every pairing policy threads through the fused MC sweep; the
         age-NOMA hungarian sweep is never slower per round than

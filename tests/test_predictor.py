@@ -161,6 +161,7 @@ class TestServerIntegration:
         b = blend_deltas(deltas, w, [], np.zeros((0,)))
         np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
 
+    @pytest.mark.slow
     def test_history_roundtrips_through_as_dict(self):
         srv = FLServer(TINY, FL, NCFG, TASK, policy="age_noma",
                        predictor="ann", eval_every=10)

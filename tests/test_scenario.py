@@ -359,6 +359,7 @@ class TestMonteCarloParity:
             np.full((4, 4), NCFG.n_subchannels
                     * NCFG.users_per_subchannel))
 
+    @pytest.mark.slow
     def test_budget_policy_respects_auto_budget(self):
         out = run_montecarlo(NCFG, FLCFG, policies=("age_noma_budget",),
                              **MC_KW)
