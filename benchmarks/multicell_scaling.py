@@ -1,0 +1,114 @@
+"""Multi-cell scaling: fused Monte-Carlo drops/sec at a FIXED total
+population N as the deployment is split into C cells (core/engine.py
+cell-partitioned planner, DESIGN.md section 10).
+
+Each cell schedules its own K subchannels: the N-client round becomes C
+instances of ~N/C clients, vmapped over the batch x cell axis through
+the segmented admission path. This benchmark tracks what that hierarchy
+COSTS on one device (the (B*C, cap) flattening carries up to 2x padding
+and the member table adds a key sort — expect C>1 below 1.0x here until
+the cell axis is sharded across devices) and what it buys (per-cell
+subchannel reuse, handover dynamics). One "drop" = one scheduled round
+for one seed, scenario dynamics (vehicular mobility + AR(1) fading)
+stepping fused on device. Also reports the measured handover rate (mean
+fraction of clients whose serving BS changes per round) — the telemetry
+the handover contract tests pin.
+
+Writes ``experiments/bench/BENCH_multicell_scaling.json``; ``--smoke``
+shrinks sizes for the CI job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def bench_case(n, c, *, rounds, n_seeds, model_bits=1e6, seed=0, reps=3):
+    import jax
+    import numpy as np
+
+    from repro.configs import FLConfig, NOMAConfig
+    from repro.core.engine import WirelessEngine
+    from repro.sim import as_scenario, get_scenario_config
+
+    ncfg = NOMAConfig()
+    flcfg = FLConfig(n_cells=c)
+    eng = WirelessEngine(ncfg, flcfg)
+    scn = as_scenario(get_scenario_config("vehicular"), ncfg, flcfg)
+
+    def run():
+        out = eng.montecarlo_scenario(
+            scn, rounds=rounds, n_seeds=n_seeds, n_clients=n,
+            model_bits=model_bits, seed=seed)
+        jax.block_until_ready(out["t_round"])
+        return out
+
+    out = run()   # compile
+    drops = rounds * n_seeds
+    best = 0.0
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run()
+        best = max(best, drops / (time.perf_counter() - t0))
+    row = {"n": n, "n_cells": c, "rounds": rounds, "n_seeds": n_seeds,
+           "drops_per_s": best}
+    if "handovers" in out:
+        # rounds after the first (round 0 has no previous association)
+        ho = np.asarray(out["handovers"])[1:]
+        row["handover_rate"] = float(ho.mean() / n) if ho.size else 0.0
+    else:
+        row["handover_rate"] = 0.0
+    return row
+
+
+def run(*, smoke=False, out_path=None, seed=0):
+    import jax
+
+    if smoke:
+        n, cells, rounds, n_seeds = 256, (1, 4), 8, 4
+    else:
+        n, cells, rounds, n_seeds = 4096, (1, 4, 16), 16, 8
+    rows = [bench_case(n, c, rounds=rounds, n_seeds=n_seeds, seed=seed)
+            for c in cells]
+    base = rows[0]["drops_per_s"]
+    for r in rows:
+        r["speedup_vs_single_cell"] = r["drops_per_s"] / base
+    result = {
+        "benchmark": "multicell_scaling",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    }
+    out_path = out_path or os.path.join(
+        "experiments", "bench", "BENCH_multicell_scaling.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"{'N':>6} {'C':>4} {'drops/s':>10} {'vs C=1':>8} "
+          f"{'handover':>9}")
+    for r in rows:
+        print(f"{r['n']:>6} {r['n_cells']:>4} {r['drops_per_s']:>10.1f} "
+              f"{r['speedup_vs_single_cell']:>7.2f}x "
+              f"{r['handover_rate']:>9.4f}")
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    main()

@@ -20,6 +20,7 @@ Claim mapping (DESIGN.md section 1):
        engine_throughput   batched wireless engine drops/sec vs numpy
        admission_scaling   full_sort vs segmented admission drops/sec vs N
        scenario_throughput fused vs pre-sampled scenario stepping
+       multicell_scaling   single-cell vs C-cell drops/sec at fixed N
 """
 from __future__ import annotations
 
@@ -36,6 +37,7 @@ from benchmarks import (
     fl_convergence,
     joint_selection,
     kernels_bench,
+    multicell_scaling,
     noma_vs_oma,
     pairing_optimality,
     predictor_gain,
@@ -48,6 +50,7 @@ BENCHES = {
     "admission_scaling": lambda quick: admission_scaling.run(smoke=quick),
     "scenario_throughput": lambda quick: scenario_throughput.run(
         smoke=quick),
+    "multicell_scaling": lambda quick: multicell_scaling.run(smoke=quick),
     "noma_vs_oma": lambda quick: noma_vs_oma.run(
         trials=50 if quick else 300),
     "fairness_age": lambda quick: fairness_age.run(

@@ -218,6 +218,10 @@ class NOMAConfig:
 # without importing core (configs must stay import-leaf).
 ADMISSIONS = ("auto", "full_sort", "segmented")
 
+# multi-cell base-station layouts (sim/topology.py, DESIGN.md section 10).
+# Same import-leaf rationale as ADMISSIONS.
+CELL_LAYOUTS = ("hex", "grid")
+
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
@@ -262,6 +266,14 @@ class FLConfig:
     #   segmented   exact bit-space threshold search + candidate-only
     #               sorts, O(N) in the population (large N)
     admission: str = "auto"
+    # multi-cell topology (sim/topology.py, DESIGN.md section 10): n_cells
+    # base stations laid out on a hex spiral or square grid with spacing
+    # sqrt(3) * cell_radius_m; clients associate with the nearest BS every
+    # round (mobility across a boundary = handover, age state follows the
+    # client) and each cell runs the staged planner on its own K subchannels
+    # (frequency reuse 1). n_cells=1 is bitwise the single-cell planner.
+    n_cells: int = 1
+    cell_layout: str = "hex"
     # wireless environment dynamics (repro.sim registry: static_iid |
     # pedestrian | vehicular | iot_bursty | hotspot_shadowed)
     scenario: str = "static_iid"
@@ -289,6 +301,11 @@ class FLConfig:
         if self.admission not in ADMISSIONS:
             raise ValueError(f"unknown admission mode {self.admission!r} "
                              f"(expected one of {ADMISSIONS})")
+        if self.n_cells < 1:
+            raise ValueError(f"n_cells must be >= 1, got {self.n_cells}")
+        if self.cell_layout not in CELL_LAYOUTS:
+            raise ValueError(f"unknown cell layout {self.cell_layout!r} "
+                             f"(expected one of {CELL_LAYOUTS})")
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,7 @@ from repro.core.plan import (
     SELECTIONS,
     RoundEnv,
     Schedule,
+    cell_capacity,
     enumerate_subsets,
     resolve_admission,
 )
@@ -1123,6 +1124,150 @@ def _schedule_batch_core(priority, gains, t_cmp, n_samples, model_bits,
                         t_budget)
 
 
+# ---------------------------------------------------------------------------
+# multi-cell core: partition clients by cell, vmap the planner over the
+# (batch x cell) axis, merge back to client space (plan.plan_multicell twin)
+# ---------------------------------------------------------------------------
+
+
+def _cell_member_table(cell, n_cells: int, cap: int):
+    """Static-shape membership table: (B, C, cap) client indices per cell
+    (first ``cap`` members in client-index order — plan.py's truncation
+    rule — padded with the sentinel ``n``). One sort of ``cell * n + idx``
+    keys groups members contiguously; ``_lower_bound`` finds each row's
+    first occurrence of its own cell id, giving the within-cell position
+    without a segmented cumsum."""
+    b, n = cell.shape
+    key = cell.astype(jnp.int32) * n + jnp.arange(n, dtype=jnp.int32)
+    skey = jnp.sort(key, axis=1)
+    scell = skey // n
+    sidx = skey % n
+    first = _lower_bound(scell, scell)
+    posc = jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)
+    dest = jnp.where(posc < cap, scell * cap + posc, n_cells * cap)
+    tbl = (jnp.full((b, n_cells * cap), n, jnp.int32)
+           .at[jnp.arange(b)[:, None], dest].set(sidx, mode="drop"))
+    return tbl.reshape(b, n_cells, cap)
+
+
+def _multicell_schedule(priority, gains, t_cmp, n_samples, model_bits,
+                        t_budget, cell, *, prm: EngineParams, oma: bool,
+                        pairing: str, selection: str, admission: str,
+                        n_cells: int, cap: int,
+                        budget: bool) -> EngineSchedule:
+    """Cell-partitioned planner: gather each cell's (<= cap) members into
+    a compact (B*C, cap) sub-batch, run the EXISTING per-cell pipeline —
+    the fast path (with the segmented admission's cache-blocked scan) or
+    the budget eviction loop — vmapped over the fused batch x cell axis,
+    then merge per-cell outputs back to client space.
+
+    Padding lanes carry (priority=-inf, gains=0): both admission paths
+    rank them strictly last, ``_pair_math``'s g=0 guard gives them rate 0,
+    and the merge drops them. With ``n_cells=1`` the member table is the
+    identity, so the result is bitwise the single-cell planner's (the C=1
+    equivalence contract, pinned by tests)."""
+    b, n = gains.shape
+    tbl = _cell_member_table(cell, n_cells, cap)
+    valid = tbl < n
+    tclip = jnp.minimum(tbl, n - 1)
+
+    def gather(x, fill):
+        g = jnp.take_along_axis(
+            jnp.broadcast_to(x[:, None, :], (b, n_cells, n)), tclip, axis=2)
+        return jnp.where(valid, g, fill).reshape(b * n_cells, cap)
+
+    c_prio = gather(priority, -jnp.inf)
+    c_g = gather(gains, 0.0)
+    c_tc = gather(t_cmp, 0.0)
+    c_ns = gather(n_samples, 0.0)
+    c_mb = jnp.repeat(model_bits, n_cells)
+    n_cand0 = min(prm.slots, cap)
+    n_pairs = max((n_cand0 + 1) // 2, 1)
+    if budget:
+        c_tb = jnp.repeat(t_budget, n_cells)
+        one = functools.partial(_schedule_one, prm=prm, oma=oma,
+                                n_pairs=n_pairs, n_cand0=n_cand0,
+                                pairing=pairing, selection=selection)
+        sub = jax.vmap(one)(c_prio, c_g, c_tc, c_ns, c_mb, c_tb)
+    else:
+        def step(p, g, tc, ns, mbx):
+            return _fast_schedule_batch(p, g, tc, ns, mbx, prm, oma,
+                                        n_pairs, n_cand0, pairing,
+                                        selection, admission)
+
+        rows = b * n_cells
+        subc = _seg_subchunk(rows, cap) if admission == "segmented" else 0
+        if subc:
+            sub = _scan_subchunks(step, (c_prio, c_g, c_tc, c_ns, c_mb),
+                                  rows, subc)
+        else:
+            sub = step(c_prio, c_g, c_tc, c_ns, c_mb)
+    return _merge_cells(sub, tbl, valid, t_cmp, n_samples, model_bits)
+
+
+def _merge_cells(sub: EngineSchedule, tbl, valid, t_cmp, n_samples,
+                 model_bits) -> EngineSchedule:
+    """Scatter per-cell schedules back to client space. Global round time
+    = max over cells of the per-cell round time (cells transmit in
+    parallel; the server waits for the slowest cell); aggregation weights
+    pooled over ALL selected clients (one global FedAvg); pair tables
+    remapped from within-cell to global client ids."""
+    b, n_cells, cap = tbl.shape
+    n = t_cmp.shape[1]
+    rows = jnp.arange(b)[:, None]
+    re = lambda x: x.reshape(b, n_cells, cap)
+    sel_pc = re(sub.selected) & valid
+    tot_pc = jnp.where(sel_pc, re(sub.t_cmp) + re(sub.t_com), 0.0)
+    t_round = jnp.max(tot_pc, axis=(1, 2))
+    cols = jnp.where(valid, tbl, n).reshape(b, n_cells * cap)
+
+    def scat(v, dtype):
+        flat = v.reshape(b, n_cells * cap).astype(dtype)
+        return (jnp.zeros((b, n), dtype)
+                .at[rows, cols].set(flat, mode="drop"))
+
+    selected = scat(sub.selected, bool)
+    rates = scat(sub.rates, jnp.float32)
+    powers = scat(sub.powers, jnp.float32)
+    evicted = scat(sub.evicted, bool)
+    # single-cell t_com convention: mb / max(rate, 1e-9) for EVERY client
+    # (bitwise equal to the per-cell values at member positions — same
+    # fp32 formula on bit-identical rates)
+    t_com = model_bits[:, None] / jnp.maximum(rates, 1e-9)
+    # pair tables: within-cell ids -> global ids via the member table
+    # ((B, C, P) gather along the cap axis); rows pointing at padding
+    # members or pad rows collapse to -1
+    def remap(p):
+        pc = p.reshape(b, n_cells, -1)
+        g = jnp.take_along_axis(tbl, jnp.clip(pc, 0, cap - 1), axis=2)
+        return jnp.where((pc >= 0) & (g < n), g,
+                         -1).reshape(b, -1).astype(jnp.int32)
+
+    w = n_samples.astype(jnp.float32) * selected
+    w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
+    return EngineSchedule(
+        selected=selected, pair_strong=remap(sub.pair_strong),
+        pair_weak=remap(sub.pair_weak), rates=rates, powers=powers,
+        t_cmp=t_cmp, t_com=t_com, t_round=t_round, agg_weights=w,
+        evicted=evicted)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("prm", "oma", "pairing", "selection",
+                                    "admission", "n_cells", "cap",
+                                    "budget"))
+def _multicell_schedule_core(priority, gains, t_cmp, n_samples, model_bits,
+                             t_budget, cell, *, prm: EngineParams,
+                             oma: bool, pairing: str, selection: str,
+                             admission: str, n_cells: int, cap: int,
+                             budget: bool) -> EngineSchedule:
+    return _multicell_schedule(priority, gains, t_cmp, n_samples,
+                               model_bits, t_budget, cell, prm=prm, oma=oma,
+                               pairing=pairing, selection=selection,
+                               admission=admission, n_cells=n_cells,
+                               cap=cap, budget=budget)
+
+
 def _rescore_pallas(out: EngineSchedule, gains, model_bits, oma: bool,
                     prm: EngineParams, impl: str) -> EngineSchedule:
     """Recompute rates/powers/times from the pair tables with the fused
@@ -1234,7 +1379,9 @@ class WirelessEngine:
                        priority=None, shard: bool = False,
                        pairing: Optional[str] = None,
                        selection: Optional[str] = None,
-                       admission: Optional[str] = None) -> EngineSchedule:
+                       admission: Optional[str] = None,
+                       cell=None,
+                       n_cells: Optional[int] = None) -> EngineSchedule:
         """Vmapped joint round over a batch of envs.
 
         gains/n_samples/cpu_freq/ages: (B, N); model_bits/t_budget: scalar
@@ -1247,6 +1394,15 @@ class WirelessEngine:
         (``FLConfig.admission``: auto | full_sort | segmented — resolved
         per batch shape by ``plan.resolve_admission``, identical schedules
         either way).
+
+        ``cell`` ((B, N) int serving-BS indices, ``sim`` scenario state)
+        with ``n_cells > 1`` (defaults to ``FLConfig.n_cells``) routes
+        through the cell-partitioned planner (``plan.plan_multicell``
+        twin): each cell is planned on its own K subchannels by the same
+        staged pipeline vmapped over the batch x cell axis, global round
+        time = max over cells, aggregation weights pooled across cells.
+        ``n_cells == 1`` ignores ``cell`` entirely (bitwise the
+        single-cell path).
 
         When ``t_budget`` is a plain scalar <= 0 (no budget, the Monte-Carlo
         default) the admission count is static and the scatter/sort-free
@@ -1283,10 +1439,33 @@ class WirelessEngine:
         if selection not in SELECTIONS:
             raise ValueError(f"unknown selection mode {selection!r} "
                              f"(expected one of {SELECTIONS})")
-        admission = resolve_admission(
-            self.admission if admission is None else admission, n, n_cand0)
         no_budget = (isinstance(t_budget, (int, float))
                      and float(t_budget) <= 0.0)
+        n_cells = self.flcfg.n_cells if n_cells is None else n_cells
+        if cell is not None and n_cells > 1:
+            cap = cell_capacity(n, n_cells, self.prm.slots)
+            n_cand0 = min(self.prm.slots, cap)
+            adm = resolve_admission(
+                self.admission if admission is None else admission,
+                cap, n_cand0)
+            if priority is None:
+                priority = self.age_priority(ages, n_samples, gains)
+            t_cmp = self.compute_times(n_samples,
+                                       jnp.asarray(cpu_freq, jnp.float32))
+            tb = (jnp.zeros((b,), jnp.float32) if no_budget
+                  else jnp.broadcast_to(
+                      jnp.asarray(t_budget, jnp.float32), (b,)))
+            out = _multicell_schedule_core(
+                jnp.asarray(priority, jnp.float32), gains, t_cmp,
+                n_samples, model_bits, tb,
+                jnp.asarray(cell, jnp.int32), prm=self.prm, oma=oma,
+                pairing=pairing, selection=selection, admission=adm,
+                n_cells=n_cells, cap=cap, budget=not no_budget)
+            if self.use_pallas:
+                out = self._rescore(out, gains, model_bits, oma)
+            return out
+        admission = resolve_admission(
+            self.admission if admission is None else admission, n, n_cand0)
         if no_budget and priority is None:
             # fully fused: age priority + T_cmp + fast path in one dispatch
             out = _fast_from_env_core(
@@ -1327,7 +1506,8 @@ class WirelessEngine:
                  oma: bool = False, priority=None,
                  policy: str = "age_noma",
                  pairing: Optional[str] = None,
-                 selection: Optional[str] = None) -> Schedule:
+                 selection: Optional[str] = None,
+                 cell=None) -> Schedule:
         """Single-env convenience wrapper returning the numpy ``Schedule``
         (drop-in for ``schedule_age_noma``; used by ``FLServer``)."""
         if t_budget is None:
@@ -1338,7 +1518,8 @@ class WirelessEngine:
             batchify(env.cpu_freq), batchify(env.ages), env.model_bits,
             t_budget=t_budget, oma=oma, pairing=pairing,
             selection=selection,
-            priority=None if priority is None else batchify(priority))
+            priority=None if priority is None else batchify(priority),
+            cell=None if cell is None else batchify(cell))
         return engine_schedule_to_numpy(out, 0, info={
             "policy": policy, "engine": "jax",
             "evicted": np.flatnonzero(
@@ -1351,14 +1532,18 @@ class WirelessEngine:
                           seed: int = 0, shard: bool = False,
                           pairing: Optional[str] = None,
                           selection: Optional[str] = None,
-                          admission: Optional[str] = None):
+                          admission: Optional[str] = None,
+                          cell_seq=None):
         """Roll the AoU state machine over R rounds for S seeds, one batched
         step per round: gains_seq (R, S, N); n_samples/cpu_freq either
         (S, N) static or (R, S, N) per-round (the scenario ``presampled=``
         escape hatch — see ``montecarlo_scenario`` for the fused path).
+        ``cell_seq`` ((R, S, N) int) activates the cell-partitioned
+        planner when ``FLConfig.n_cells > 1``.
 
         Returns dict of stacked per-round metrics (t_round (R, S),
-        n_selected (R, S), max_age (R, S)) plus participation (S, N).
+        n_selected (R, S), max_age (R, S)) plus participation (S, N) and,
+        under multi-cell, per-round ``handovers`` (R, S).
         ``shard=True`` splits the independent seeds over all devices.
         """
         gains_seq = jnp.asarray(gains_seq, jnp.float32)
@@ -1378,10 +1563,14 @@ class WirelessEngine:
                     jax.device_put(x, per_seed if x.ndim == 2 else seq)
                     for x in (n_samples, cpu_freq))
 
+        if cell_seq is not None:
+            cell_seq = jnp.asarray(cell_seq, jnp.int32)
+
         def env_fn(i):
             return (gains_seq[i],
                     n_samples if n_samples.ndim == 2 else n_samples[i],
-                    cpu_freq if cpu_freq.ndim == 2 else cpu_freq[i])
+                    cpu_freq if cpu_freq.ndim == 2 else cpu_freq[i],
+                    None if cell_seq is None else cell_seq[i])
 
         return self._mc_loop(env_fn, r, model_bits, policy=policy,
                              t_budget=t_budget, seed=seed, pairing=pairing,
@@ -1424,7 +1613,8 @@ class WirelessEngine:
 
         def env_fn(i):
             box[0], env = scenario.step(box[0], env_keys[i])
-            return env.gains, env.n_samples, env.cpu_freq
+            return (env.gains, env.n_samples, env.cpu_freq,
+                    getattr(env, "cell", None))
 
         return self._mc_loop(env_fn, rounds, model_bits, policy=policy,
                              t_budget=t_budget, seed=seed, pairing=pairing,
@@ -1438,61 +1628,90 @@ class WirelessEngine:
         """R-round rollout: a Python loop of jitted per-round steps rather
         than ``lax.scan`` — on CPU the XLA while-loop runs the identical
         body ~1.7x slower than back-to-back jit dispatches. ``env_fn(i)``
-        yields round i's (gains, n_samples, cpu_freq), either sliced from
-        pre-sampled arrays or stepped out of a scenario state."""
+        yields round i's (gains, n_samples, cpu_freq, cell-or-None),
+        either sliced from pre-sampled arrays or stepped out of a
+        scenario state. With ``FLConfig.n_cells > 1`` and a non-None
+        cell, each step runs the cell-partitioned planner and the output
+        gains per-round handover counts."""
         pairing = self.pairing if pairing is None else pairing
         selection = self.selection if selection is None else selection
         if selection not in SELECTIONS:
             raise ValueError(f"unknown selection mode {selection!r} "
                              f"(expected one of {SELECTIONS})")
         admission = self.admission if admission is None else admission
+        n_cells = self.flcfg.n_cells
         keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
         mb = jnp.asarray(model_bits, jnp.float32)
         ages = part = None
-        t_rounds, n_sels, max_ages = [], [], []
+        multicell = False
+        cap = 0
+        prev_cell = None
+        t_rounds, n_sels, max_ages, handovers = [], [], [], []
         for i in range(rounds):
-            gains, n_samples, cpu_freq = env_fn(i)
+            gains, n_samples, cpu_freq, cellv = env_fn(i)
             if ages is None:
                 s, n = gains.shape
-                n_cand0 = min(self.prm.slots, n)
+                multicell = n_cells > 1 and cellv is not None
+                if multicell:
+                    cap = cell_capacity(n, n_cells, self.prm.slots)
+                    n_cand0 = min(self.prm.slots, cap)
+                    admission = resolve_admission(admission, cap, n_cand0)
+                else:
+                    n_cand0 = min(self.prm.slots, n)
+                    admission = resolve_admission(admission, n, n_cand0)
                 n_pairs = max((n_cand0 + 1) // 2, 1)
-                admission = resolve_admission(admission, n, n_cand0)
                 ages = jnp.ones((s, n), jnp.float32)
                 part = jnp.zeros((s, n), jnp.float32)
             ages, part, t_round, n_sel, max_age = _montecarlo_step(
                 ages, part, gains, keys[i], n_samples, cpu_freq, mb,
                 jnp.asarray(i, jnp.int32),
+                cellv if multicell else None,
                 prm=self.prm, gamma=self.flcfg.age_exponent, policy=policy,
                 t_budget=float(t_budget), n_pairs=n_pairs, n_cand0=n_cand0,
                 pairing=pairing, selection=selection, admission=admission,
-                pallas_impl=self.pallas_impl if self.use_pallas else None)
+                pallas_impl=self.pallas_impl if self.use_pallas else None,
+                n_cells=n_cells if multicell else 1, cap=cap)
             t_rounds.append(t_round)
             n_sels.append(n_sel)
             max_ages.append(max_age)
-        return {"t_round": jnp.stack(t_rounds),
-                "n_selected": jnp.stack(n_sels),
-                "max_age": jnp.stack(max_ages), "participation": part,
-                "final_ages": ages}
+            if multicell:
+                handovers.append(
+                    jnp.zeros(gains.shape[0], jnp.int32) if prev_cell is None
+                    else jnp.sum((cellv != prev_cell).astype(jnp.int32),
+                                 axis=1))
+                prev_cell = cellv
+        out = {"t_round": jnp.stack(t_rounds),
+               "n_selected": jnp.stack(n_sels),
+               "max_age": jnp.stack(max_ages), "participation": part,
+               "final_ages": ages}
+        if multicell:
+            out["handovers"] = jnp.stack(handovers)
+        return out
 
 
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "policy",
                                              "t_budget", "n_pairs",
                                              "n_cand0", "pairing",
                                              "selection", "admission",
-                                             "pallas_impl"))
+                                             "pallas_impl", "n_cells",
+                                             "cap"))
 def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
-                     model_bits, round_idx, *, prm: EngineParams,
+                     model_bits, round_idx, cell=None, *,
+                     prm: EngineParams,
                      gamma: float, policy: str, t_budget: float,
                      n_pairs: int, n_cand0: int,
                      pairing: str = "strong_weak",
                      selection: str = "greedy_set",
                      admission: str = "full_sort",
-                     pallas_impl: Optional[str] = None):
+                     pallas_impl: Optional[str] = None,
+                     n_cells: int = 1, cap: int = 0):
     """One Monte-Carlo round over all seeds; every policy in
     ``fl.rounds.POLICIES`` resolves to a priority vector here
     (``age_noma_budget`` is age priority + the caller's positive
     ``t_budget``). ``round_idx`` is traced so the round-robin window can
-    advance without recompiling."""
+    advance without recompiling. A non-None ``cell`` with ``n_cells > 1``
+    routes through the cell-partitioned planner (``n_cand0``/``n_pairs``
+    are then the per-cell values for capacity ``cap``)."""
     s, n = gains.shape
     oma = policy == "oma_age"
     t_cmp = _compute_times(prm, n_samples, cpu_freq)
@@ -1508,7 +1727,13 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
                                 gains.shape)
     else:
         raise ValueError(f"unknown montecarlo policy {policy!r}")
-    if t_budget <= 0.0:
+    if cell is not None and n_cells > 1:
+        tb = jnp.full((s,), t_budget, jnp.float32)
+        sched = _multicell_schedule(
+            prio, gains, t_cmp, n_samples, mb, tb, cell, prm=prm, oma=oma,
+            pairing=pairing, selection=selection, admission=admission,
+            n_cells=n_cells, cap=cap, budget=t_budget > 0.0)
+    elif t_budget <= 0.0:
         def step(p, g, tc, ns, mbx):
             return _fast_schedule_batch(p, g, tc, ns, mbx, prm, oma,
                                         n_pairs, n_cand0, pairing,

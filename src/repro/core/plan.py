@@ -413,6 +413,100 @@ def plan_fixed(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig, *,
 
 
 # ---------------------------------------------------------------------------
+# multi-cell driver: partition by cell, run the staged pipeline per cell
+# ---------------------------------------------------------------------------
+
+
+def cell_capacity(n: int, n_cells: int, slots: int) -> int:
+    """Static per-cell member capacity of the cell-partitioned planners.
+
+    Both engines consider at most this many members per cell — the first
+    ``cap`` in client-index order (a static-shape bound the jax engine can
+    gather against; the numpy driver applies the identical truncation so
+    the two can never disagree). ``2x`` the ceil-mean occupancy absorbs
+    the multinomial imbalance of random placement at realistic N/C while
+    staying O(N) total work; the ``2 * slots`` floor guarantees every cell
+    can fill its subchannels even when the mean occupancy is tiny."""
+    if n_cells <= 1:
+        return n
+    avg = -(-n // n_cells)
+    return min(n, max(2 * avg, 2 * slots))
+
+
+def plan_multicell(env: RoundEnv, cell: np.ndarray, n_cells: int,
+                   ncfg: NOMAConfig, flcfg: FLConfig, *,
+                   priority: np.ndarray, oma: bool = False,
+                   info: Optional[dict] = None,
+                   t_budget: Optional[float] = None,
+                   selection: Optional[str] = None,
+                   cap: Optional[int] = None) -> Schedule:
+    """Cell-partitioned driver of the staged pipeline: each cell runs
+    ``plan_round`` on its own members (frequency reuse 1 — every cell has
+    the full K subchannels, and the round-time budget applies per cell
+    since cells transmit in parallel), then the per-cell schedules merge
+    into one client-space Schedule:
+
+    * global round time = max over cells (the server waits for the slowest
+      cell before aggregating);
+    * aggregation weights pooled across cells (w_n = n_samples * selected
+      / sum over ALL selected clients — one global FedAvg, not per-cell);
+    * pair tables / eviction lists remapped to global client ids.
+
+    ``n_cells <= 1`` delegates to ``plan_round`` unchanged (the C=1
+    equivalence contract; engine twin: ``engine._multicell_schedule``).
+    """
+    if n_cells <= 1:
+        return plan_round(env, ncfg, flcfg, priority=priority, oma=oma,
+                          info=info, t_budget=t_budget, selection=selection)
+    n = len(env.gains)
+    slots = ncfg.n_subchannels * ncfg.users_per_subchannel
+    cap = cell_capacity(n, n_cells, slots) if cap is None else cap
+    cell = np.asarray(cell, dtype=int)
+    priority = np.asarray(priority, dtype=np.float64)
+    t_cmp = roundtime.compute_times(env.n_samples,
+                                    flcfg.cpu_cycles_per_sample,
+                                    env.cpu_freq, flcfg.local_epochs)
+    selected = np.zeros(n, dtype=bool)
+    rates = np.zeros(n)
+    powers = np.zeros(n)
+    pairs: list = []
+    t_round = 0.0
+    cells_info = []
+    for c in range(n_cells):
+        members = np.flatnonzero(cell == c)[:cap]
+        if members.size == 0:
+            cells_info.append({"cell": c, "n_members": 0, "t_round": 0.0})
+            continue
+        sub_env = RoundEnv(gains=env.gains[members],
+                           n_samples=env.n_samples[members],
+                           cpu_freq=env.cpu_freq[members],
+                           ages=env.ages[members],
+                           model_bits=env.model_bits)
+        sub = plan_round(sub_env, ncfg, flcfg, priority=priority[members],
+                         oma=oma, t_budget=t_budget, selection=selection)
+        selected[members] = sub.selected
+        rates[members] = sub.rates
+        powers[members] = sub.powers
+        pairs += [(int(members[i]), int(members[j]) if j >= 0 else -1)
+                  for (i, j) in sub.pairs]
+        t_round = max(t_round, sub.t_round)
+        cells_info.append({
+            "cell": c, "n_members": int(members.size),
+            "t_round": sub.t_round,
+            "evicted": [int(members[e])
+                        for e in sub.info.get("evicted", [])]})
+    t_com = roundtime.comm_times(env.model_bits, rates)
+    w = env.n_samples.astype(np.float64) * selected
+    w = w / max(w.sum(), 1e-12)
+    out_info = {**dict(info or {}),
+                "selection": (flcfg.selection if selection is None
+                              else selection),
+                "n_cells": n_cells, "cell_cap": cap, "cells": cells_info}
+    return Schedule(selected, pairs, rates, powers, t_cmp, t_com, t_round,
+                    w, out_info)
+
+
+# ---------------------------------------------------------------------------
 # exhaustive references (tests / benchmarks)
 # ---------------------------------------------------------------------------
 

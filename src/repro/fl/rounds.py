@@ -91,6 +91,12 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
     mirroring ``FLServer``. Returns per-policy raw per-round arrays plus a
     scalar ``summary`` (JSON-safe) with mean round time, total time,
     staleness, and the Jain fairness index of participation.
+
+    With ``FLConfig.n_cells > 1`` the scenario's per-client cell
+    association is threaded through to the cell-partitioned planner
+    (each cell schedules its own K subchannels; global round time = max
+    over cells) and the summary gains ``handover_rate`` — the mean
+    fraction of clients whose serving BS changed per round.
     """
     import jax
     import jax.numpy as jnp
@@ -112,6 +118,7 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
     s, n, r = n_seeds, n_clients, rounds
     k_env = jax.random.PRNGKey(seed)
 
+    multicell = flcfg.n_cells > 1
     envs = scn.rollout(k_env, r, (s, n)) if presampled else None
     auto_budget = None
     if "age_noma_budget" in policies and t_budget <= 0.0:
@@ -119,7 +126,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
                 else scn.first_env(k_env, r, (s, n)))
         ref = eng.schedule_batch(env0[0], env0[1], env0[2],
                                  jnp.ones((s, n), jnp.float32), model_bits,
-                                 priority=env0[0])
+                                 priority=env0[0],
+                                 cell=env0[3] if multicell else None)
         auto_budget = 2.0 * max(float(np.asarray(ref.t_round).mean()), 1e-6)
 
     results: dict = {"summary": {}, "meta": {
@@ -128,7 +136,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
         "scenario": scn.name, "presampled": bool(presampled),
         "slots": eng.prm.slots, "use_pallas": use_pallas,
         "pairing": eng.pairing, "selection": eng.selection,
-        "admission": eng.admission}}
+        "admission": eng.admission,
+        "n_cells": flcfg.n_cells, "cell_layout": flcfg.cell_layout}}
     for policy in policies:
         tb = t_budget
         if policy == "age_noma_budget" and tb <= 0.0:
@@ -137,7 +146,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
             out = eng.montecarlo_rounds(
                 np.asarray(envs.gains), np.asarray(envs.n_samples),
                 np.asarray(envs.cpu_freq), model_bits, policy=policy,
-                t_budget=tb, seed=seed, shard=shard)
+                t_budget=tb, seed=seed, shard=shard,
+                cell_seq=np.asarray(envs.cell) if multicell else None)
         else:
             out = eng.montecarlo_scenario(
                 scn, rounds=r, n_seeds=s, n_clients=n,
@@ -155,6 +165,10 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
             "mean_max_age": float(np.asarray(out["max_age"]).mean()),
             "jain_participation": float(jain.mean()),
         }
+        if "handovers" in out:
+            # mean fraction of clients switching serving BS per round
+            results["summary"][policy]["handover_rate"] = float(
+                np.asarray(out["handovers"]).mean() / n)
         if policy == "age_noma_budget":
             results["summary"][policy]["t_budget_s"] = float(tb)
     return results

@@ -191,6 +191,8 @@ class FLServer:
         drivers (numpy) or the engine stage twins (jax), so each policy
         can run with or without the update predictor, under any pairing
         policy and either ``FLConfig.selection`` mode."""
+        if self.fl.n_cells > 1:
+            return self._select_multicell(env)
         p = self.policy
         if p in ("age_noma", "age_noma_budget", "oma_age"):
             oma = p == "oma_age"
@@ -241,7 +243,59 @@ class FLServer:
                                         self.fl)
         raise ValueError(f"unknown policy {p!r}")
 
-    # -- one round ---------------------------------------------------------
+    def _select_multicell(self, env: RoundEnv) -> Schedule:
+        """Multi-cell dispatch (``FLConfig.n_cells > 1``): every policy
+        resolves to a priority vector and hands off to the
+        cell-partitioned planner (``plan.plan_multicell`` / the engine's
+        cell-blocked twin) with the scenario's current serving-BS
+        association — each cell schedules its own K subchannels via the
+        exact single-cell staged pipeline, global round time = max over
+        cells, aggregation weights pooled across cells."""
+        p = self.policy
+        n = self.fl.n_clients
+        cellv = np.asarray(self.scenario.cell)
+        oma = p == "oma_age"
+        t_budget = None
+        priority = None  # None => the paper's age priority
+        if p in ("age_noma", "age_noma_budget", "oma_age"):
+            if p == "age_noma_budget":
+                if self._auto_budget is None:
+                    # budget auto-calibration mirrors the single-cell
+                    # path but against the multi-cell channel-greedy
+                    # round time (max over cells)
+                    ref = plan.plan_multicell(
+                        env, cellv, self.fl.n_cells, self.noma, self.fl,
+                        priority=np.asarray(env.gains, np.float64))
+                    self._auto_budget = (self.fl.t_budget_s
+                                         or 2.0 * max(ref.t_round, 1e-6))
+                t_budget = self._auto_budget
+        elif p == "random":
+            priority = self.rng.uniform(size=n)
+            t_budget = 0.0
+        elif p == "channel":
+            priority = np.asarray(env.gains, np.float64)
+            t_budget = 0.0
+        elif p == "round_robin":
+            # rotating-window priority (engine round_robin_priority twin);
+            # per cell the window picks that cell's earliest members in
+            # the rotation order
+            slots = min(self.noma.n_subchannels
+                        * self.noma.users_per_subchannel, n)
+            start = (self.round_idx * slots) % n
+            priority = -(((np.arange(n) - start) % n).astype(np.float64))
+            t_budget = 0.0
+        else:
+            raise ValueError(f"unknown policy {p!r}")
+        if self.engine is not None:
+            return self.engine.schedule(
+                env, t_budget=t_budget, oma=oma, policy=p,
+                priority=priority, cell=cellv)
+        if priority is None:
+            priority = plan.age_score(env, self.fl)
+        return plan.plan_multicell(env, cellv, self.fl.n_cells, self.noma,
+                                   self.fl, priority=priority, oma=oma,
+                                   t_budget=t_budget or None,  # 0.0 => none
+                                   info={"policy": p, "engine": "numpy"})
     def run_round(self) -> Schedule:
         # advance the wireless environment; under dynamic scenarios the
         # env's n_samples only shape the SCHEDULER's view (age priority

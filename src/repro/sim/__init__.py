@@ -14,9 +14,11 @@ from repro.sim.scenario import (
     as_scenario,
     get_scenario_config,
 )
+from repro.sim.topology import CellTopology, bs_layout, nearest_cell, region_radius
 
 __all__ = [
     "SCENARIOS",
+    "CellTopology",
     "NumpyScenario",
     "RoundEnvBatch",
     "Scenario",
@@ -25,6 +27,9 @@ __all__ = [
     "ScenarioState",
     "as_scenario",
     "bessel_j0",
+    "bs_layout",
     "get_scenario_config",
     "jakes_rho",
+    "nearest_cell",
+    "region_radius",
 ]

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig, NOMAConfig
 from repro.core import noma
+from repro.sim import topology as T
 from repro.sim.scenario import ScenarioConfig, ScenarioParams
 
 
@@ -43,6 +44,15 @@ class NumpyScenario:
     def _annulus(self, rng: np.random.Generator, n: int) -> np.ndarray:
         return noma.sample_positions(rng, n, self.ncfg)
 
+    def _multicell_annulus(self, rng: np.random.Generator,
+                           n: int) -> np.ndarray:
+        """Uniform home cell + annulus offset around its BS; collapses to
+        the plain (stream-identical) annulus draw when n_cells == 1."""
+        if not self.multicell:
+            return self._annulus(rng, n)
+        home = rng.integers(0, self.prm.n_cells, n)
+        return self.bs[home] + self._annulus(rng, n)
+
     def init(self, rng: np.random.Generator, n: int,
              n_samples: Optional[np.ndarray] = None
              ) -> Tuple[np.ndarray, np.ndarray]:
@@ -54,21 +64,34 @@ class NumpyScenario:
         """
         prm = self.prm
         self.n = n
-        if prm.mobility == "fixed":
+        self.multicell = prm.n_cells > 1
+        self.bs = T.bs_layout(prm.n_cells, prm.cell_layout,
+                              prm.cell_radius_m)
+        self.last_handovers = 0
+        if self.multicell:
+            # multi-cell is always position-based (the serving BS is
+            # derived from position even under fixed mobility); the
+            # legacy-stream pin below only covers the n_cells=1 default
+            self.pos = self._multicell_annulus(rng, n)
+            self.cell, d = T.nearest_cell(self.pos, self.bs)
+            self.distances = np.maximum(d, prm.min_radius_m)
+        elif prm.mobility == "fixed":
             # legacy stream: one uniform draw via noma.sample_distances
             self.distances = noma.sample_distances(rng, n, self.ncfg)
             self.pos = None
+            self.cell = np.zeros(n, np.int32)
         else:
             self.pos = self._annulus(rng, n)
             self.distances = np.maximum(
                 np.linalg.norm(self.pos, axis=-1), prm.min_radius_m)
+            self.cell = np.zeros(n, np.int32)
         self.cpu_base = rng.uniform(prm.cpu_lo, prm.cpu_hi, n)
         # draws below only exist for the processes that are enabled, so the
         # static_iid stream stays exactly (distances, cpu)
         if prm.mobility != "fixed":
             self.speed = rng.uniform(prm.v_min, prm.v_max, n)
             if prm.mobility == "waypoint":
-                self.aux = self._annulus(rng, n)
+                self.aux = self._multicell_annulus(rng, n)
             else:
                 th = rng.uniform(0.0, 2.0 * np.pi, n)
                 self.aux = self.speed[:, None] * np.stack(
@@ -105,20 +128,45 @@ class NumpyScenario:
             unit = delta / np.maximum(d, 1e-9)[:, None]
             self.pos = np.where(arrived[:, None], self.aux,
                                 self.pos + unit * step_len[:, None])
-            new_wp = self._annulus(rng, n)
+            new_wp = self._multicell_annulus(rng, n)
             new_v = rng.uniform(prm.v_min, prm.v_max, n)
             self.aux = np.where(arrived[:, None], new_wp, self.aux)
             self.speed = np.where(arrived, new_v, self.speed)
-        elif prm.mobility == "drift":
+        elif prm.mobility == "drift" and not self.multicell:
+            # reflect at the cell edge AND the BS exclusion disc
+            # (bit-identical to processes.drift_step with r_min set)
             pos2 = self.pos + self.aux * prm.move_s
             r = np.linalg.norm(pos2, axis=-1)
-            out = r > prm.cell_radius_m
-            self.aux = np.where(out[:, None], -self.aux, self.aux)
+            hit = (r > prm.cell_radius_m) | (r < prm.min_radius_m)
+            self.aux = np.where(hit[:, None], -self.aux, self.aux)
+            target = np.clip(r, prm.min_radius_m, prm.cell_radius_m)
             self.pos = np.where(
-                out[:, None],
-                pos2 * (prm.cell_radius_m / np.maximum(r, 1e-9))[:, None],
-                pos2)
-        if prm.mobility != "fixed":
+                hit[:, None],
+                pos2 * (target / np.maximum(r, 1e-9))[:, None], pos2)
+        elif prm.mobility == "drift":
+            # multi-cell twin of processes.drift_step_multicell: reflect
+            # at the deployment's outer radius and the nearest BS's disc
+            pos2 = self.pos + self.aux * prm.move_s
+            r = np.linalg.norm(pos2, axis=-1)
+            region_r = T.region_radius(prm.n_cells, prm.cell_layout,
+                                       prm.cell_radius_m)
+            out = r > region_r
+            ci, rb = T.nearest_cell(pos2, self.bs)
+            db = pos2 - self.bs[ci]
+            inn = rb < prm.min_radius_m
+            self.aux = np.where((out | inn)[:, None], -self.aux, self.aux)
+            pos_out = pos2 * (region_r / np.maximum(r, 1e-9))[:, None]
+            pos_inn = (self.bs[ci]
+                       + db * (prm.min_radius_m
+                               / np.maximum(rb, 1e-9))[:, None])
+            self.pos = np.where(inn[:, None], pos_inn,
+                                np.where(out[:, None], pos_out, pos2))
+        if self.multicell:
+            cell, d = T.nearest_cell(self.pos, self.bs)
+            self.last_handovers = int(np.sum(cell != self.cell))
+            self.cell = cell
+            self.distances = np.maximum(d, prm.min_radius_m)
+        elif prm.mobility != "fixed":
             self.distances = np.maximum(
                 np.linalg.norm(self.pos, axis=-1), prm.min_radius_m)
 

@@ -23,7 +23,9 @@ Mobility models
 * fixed — distances drawn once (today's behavior);
 * waypoint — random-waypoint inside the annulus: move toward the target at
   the client's speed, redraw target + speed on arrival;
-* drift — vehicular constant-velocity motion reflected at the cell edge.
+* drift — vehicular constant-velocity motion reflected at the cell edge
+  and at the BS exclusion disc (multi-cell: at the nearest BS's disc and
+  the deployment's outer radius).
 """
 from __future__ import annotations
 
@@ -87,15 +89,29 @@ def distances_of(pos, r_min: float):
     return jnp.maximum(jnp.linalg.norm(pos, axis=-1), r_min)
 
 
+def multicell_positions(key, shape, bs, r_min: float, r_max: float):
+    """Uniform home cell, then uniform-in-annulus offset around its BS:
+    positions of shape ``shape + (2,)`` for a multi-cell deployment.
+    ``bs`` is the ``(C, 2)`` layout (sim/topology.bs_layout)."""
+    k_c, k_off = jax.random.split(key)
+    home = jax.random.randint(k_c, shape, 0, bs.shape[0])
+    return jnp.asarray(bs)[home] + annulus_positions(k_off, shape,
+                                                     r_min, r_max)
+
+
 # ---------------------------------------------------------------------------
 # mobility transitions
 # ---------------------------------------------------------------------------
 
 
 def waypoint_step(pos, waypoint, speed, key, *, move_s: float,
-                  r_min: float, r_max: float, v_min: float, v_max: float):
+                  r_min: float, r_max: float, v_min: float, v_max: float,
+                  centers=None):
     """Random-waypoint: advance toward the target by ``speed * move_s``;
-    on arrival redraw the waypoint (uniform in the annulus) and speed."""
+    on arrival redraw the waypoint (uniform in the annulus) and speed.
+    With ``centers`` (a ``(C, 2)`` BS layout) the redraw targets a uniform
+    cell's annulus instead, so waypoint clients roam between cells;
+    ``centers=None`` keeps the single-cell draw (and key schedule)."""
     k_wp, k_v = jax.random.split(key)
     delta = waypoint - pos
     d = jnp.linalg.norm(delta, axis=-1)
@@ -104,22 +120,52 @@ def waypoint_step(pos, waypoint, speed, key, *, move_s: float,
     unit = delta / jnp.maximum(d, 1e-9)[..., None]
     pos2 = jnp.where(arrived[..., None], waypoint,
                      pos + unit * step_len[..., None])
-    new_wp = annulus_positions(k_wp, pos.shape[:-1], r_min, r_max)
+    if centers is None:
+        new_wp = annulus_positions(k_wp, pos.shape[:-1], r_min, r_max)
+    else:
+        new_wp = multicell_positions(k_wp, pos.shape[:-1], centers,
+                                     r_min, r_max)
     new_v = jax.random.uniform(k_v, speed.shape, minval=v_min, maxval=v_max)
     waypoint2 = jnp.where(arrived[..., None], new_wp, waypoint)
     speed2 = jnp.where(arrived, new_v, speed)
     return pos2, waypoint2, speed2
 
 
-def drift_step(pos, vel, *, move_s: float, r_max: float):
-    """Vehicular drift: constant velocity, reflected at the cell edge
-    (velocity reversed, position pulled back onto the boundary circle)."""
+def drift_step(pos, vel, *, move_s: float, r_max: float, r_min: float = 0.0):
+    """Vehicular drift: constant velocity, reflected at the cell edge AND
+    at the ``r_min`` BS exclusion disc (velocity reversed, position pulled
+    onto the violated boundary circle). ``r_min=0`` reflects only at the
+    outer edge — bitwise the historical behavior."""
     pos2 = pos + vel * move_s
     r = jnp.linalg.norm(pos2, axis=-1)
-    out = r > r_max
-    vel2 = jnp.where(out[..., None], -vel, vel)
-    pos2 = jnp.where(out[..., None],
-                     pos2 * (r_max / jnp.maximum(r, 1e-9))[..., None], pos2)
+    hit = (r > r_max) | (r < r_min)
+    vel2 = jnp.where(hit[..., None], -vel, vel)
+    target = jnp.clip(r, r_min, r_max)
+    pos2 = jnp.where(hit[..., None],
+                     pos2 * (target / jnp.maximum(r, 1e-9))[..., None], pos2)
+    return pos2, vel2
+
+
+def drift_step_multicell(pos, vel, bs, *, move_s: float, region_r: float,
+                         r_min: float):
+    """Multi-cell vehicular drift: reflect at the deployment's outer
+    radius (``region_r``, origin-centered) and at the nearest BS's
+    ``r_min`` exclusion disc — the per-cell analogue of ``drift_step``'s
+    two boundaries."""
+    pos2 = pos + vel * move_s
+    r = jnp.linalg.norm(pos2, axis=-1)
+    out = r > region_r
+    d2 = jnp.sum((pos2[..., None, :] - bs) ** 2, axis=-1)
+    ci = jnp.argmin(d2, axis=-1)
+    db = pos2 - jnp.asarray(bs)[ci]
+    rb = jnp.sqrt(jnp.take_along_axis(d2, ci[..., None], axis=-1))[..., 0]
+    inn = rb < r_min
+    vel2 = jnp.where((out | inn)[..., None], -vel, vel)
+    pos_out = pos2 * (region_r / jnp.maximum(r, 1e-9))[..., None]
+    pos_inn = (jnp.asarray(bs)[ci]
+               + db * (r_min / jnp.maximum(rb, 1e-9))[..., None])
+    pos2 = jnp.where(inn[..., None], pos_inn,
+                     jnp.where(out[..., None], pos_out, pos2))
     return pos2, vel2
 
 

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig, NOMAConfig
 from repro.sim import processes as P
+from repro.sim import topology as T
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +94,8 @@ class ScenarioParams:
     cpu_hi: float
     ns_lo: float
     ns_hi: float
+    n_cells: int = 1
+    cell_layout: str = "hex"
 
     @classmethod
     def from_configs(cls, scfg: ScenarioConfig, ncfg: NOMAConfig,
@@ -105,6 +108,22 @@ class ScenarioParams:
             raise ValueError(f"unknown compute model {scfg.compute!r}")
         if scfg.data not in ("static", "dynamic"):
             raise ValueError(f"unknown data model {scfg.data!r}")
+        # numeric sanity — fail at construction, not as NaN/silent nonsense
+        # deep inside jax.random.uniform/exp (FLConfig.__post_init__ style)
+        if scfg.speed_mps[0] > scfg.speed_mps[1]:
+            raise ValueError(f"speed_mps range must be (v_min <= v_max), "
+                             f"got {scfg.speed_mps}")
+        if scfg.speed_mps[0] < 0.0:
+            raise ValueError(f"speed_mps must be non-negative, "
+                             f"got {scfg.speed_mps}")
+        if scfg.shadow_sigma_db < 0.0:
+            raise ValueError(f"shadow_sigma_db must be >= 0, "
+                             f"got {scfg.shadow_sigma_db}")
+        if scfg.shadow_decorr_m <= 0.0:
+            raise ValueError(f"shadow_decorr_m must be > 0, "
+                             f"got {scfg.shadow_decorr_m}")
+        if scfg.move_s <= 0.0:
+            raise ValueError(f"move_s must be > 0, got {scfg.move_s}")
         return cls(
             channel=scfg.channel,
             rho_fading=P.jakes_rho(scfg.doppler_hz, scfg.slot_s),
@@ -126,6 +145,8 @@ class ScenarioParams:
             cpu_hi=flcfg.cpu_freq_range_ghz[1] * 1e9,
             ns_lo=float(flcfg.samples_per_client[0]),
             ns_hi=float(flcfg.samples_per_client[1]),
+            n_cells=flcfg.n_cells,
+            cell_layout=flcfg.cell_layout,
         )
 
 
@@ -137,24 +158,31 @@ class ScenarioParams:
 class ScenarioState(NamedTuple):
     """Pytree of the full environment state; every leaf's leading dims are
     the batch shape (S, N). ``aux`` is the waypoint target (waypoint
-    mobility) or the velocity vector (drift); unused under fixed."""
+    mobility) or the velocity vector (drift); unused under fixed.
+    ``fading`` is the complex AR(1) state and is a zero-size ``(S, N, 0)``
+    leaf under ``channel="iid"`` (block fading carries no state).
+    ``cell`` is the serving-BS index, derived from position every step
+    (Voronoi association, sim/topology.py) — all-zeros when n_cells=1."""
     pos: jax.Array          # (S, N, 2) m
     aux: jax.Array          # (S, N, 2) m | m/s
     speed: jax.Array        # (S, N) m/s
-    fading: jax.Array       # (S, N, 2) complex h as re/im (ar1 only)
+    fading: jax.Array       # (S, N, 2) complex h as re/im (ar1; else (S,N,0))
     shadow_db: jax.Array    # (S, N) dB
     cpu_base: jax.Array     # (S, N) Hz
     throttled: jax.Array    # (S, N) bool
     n_base: jax.Array       # (S, N) samples
     n_cur: jax.Array        # (S, N) samples
+    cell: jax.Array         # (S, N) int32 serving-BS index
 
 
 class RoundEnvBatch(NamedTuple):
-    """What the engine schedules each round (all (S, N) f32); a stacked
-    (R, S, N) version is what ``rollout`` returns."""
+    """What the engine schedules each round ((S, N) f32, plus the int32
+    ``cell`` association); a stacked (R, S, N) version is what ``rollout``
+    returns."""
     gains: jax.Array
     n_samples: jax.Array
     cpu_freq: jax.Array
+    cell: jax.Array
 
 
 # ---------------------------------------------------------------------------
@@ -162,12 +190,26 @@ class RoundEnvBatch(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+def _bs_of(prm: ScenarioParams):
+    """The (C, 2) BS layout as an on-device constant (host-cached fp64)."""
+    return jnp.asarray(T.bs_layout(prm.n_cells, prm.cell_layout,
+                                   prm.cell_radius_m))
+
+
 @functools.partial(jax.jit, static_argnames=("prm", "s", "n"))
 def _init_core(key, *, prm: ScenarioParams, s: int, n: int) -> ScenarioState:
     k_pos, k_v, k_aux, k_fade, k_sh, k_cpu, k_ns = jax.random.split(key, 7)
     shape = (s, n)
-    pos = P.annulus_positions(k_pos, shape, prm.min_radius_m,
-                              prm.cell_radius_m)
+    multicell = prm.n_cells > 1
+    if multicell:
+        # one extra split of k_pos only on the multi-cell branch: the
+        # C=1 key schedule (and therefore all existing parity pins) is
+        # untouched, and every other draw keeps its own dedicated key
+        pos = P.multicell_positions(k_pos, shape, _bs_of(prm),
+                                    prm.min_radius_m, prm.cell_radius_m)
+    else:
+        pos = P.annulus_positions(k_pos, shape, prm.min_radius_m,
+                                  prm.cell_radius_m)
     # speed only has meaning when clients move: under fixed mobility it is
     # pinned to 0 so the Gudmundson shadowing correlation exp(-v T/d) is 1
     # and shadowing stays at its init draw (matching the numpy twin)
@@ -177,41 +219,73 @@ def _init_core(key, *, prm: ScenarioParams, s: int, n: int) -> ScenarioState:
         speed = jax.random.uniform(k_v, shape, minval=prm.v_min,
                                    maxval=prm.v_max)
     if prm.mobility == "waypoint":
-        aux = P.annulus_positions(k_aux, shape, prm.min_radius_m,
-                                  prm.cell_radius_m)
+        if multicell:
+            aux = P.multicell_positions(k_aux, shape, _bs_of(prm),
+                                        prm.min_radius_m, prm.cell_radius_m)
+        else:
+            aux = P.annulus_positions(k_aux, shape, prm.min_radius_m,
+                                      prm.cell_radius_m)
     elif prm.mobility == "drift":
         th = jax.random.uniform(k_aux, shape, minval=0.0,
                                 maxval=2.0 * jnp.pi)
         aux = speed[..., None] * jnp.stack([jnp.cos(th), jnp.sin(th)], -1)
     else:
         aux = jnp.zeros_like(pos)
-    fading = jax.random.normal(k_fade, shape + (2,)) * np.sqrt(0.5)
+    if prm.channel == "ar1":
+        fading = jax.random.normal(k_fade, shape + (2,)) * np.sqrt(0.5)
+    else:
+        # iid block fading carries no channel state: a zero-size leaf
+        # instead of a dead (S, N, 2) array threaded through every round.
+        # k_fade is still split off above, so the key schedule (and the
+        # per-round Exp(1) draws in _step_core) is bit-identical.
+        fading = jnp.zeros(shape + (0,))
     shadow = jax.random.normal(k_sh, shape) * prm.shadow_sigma_db
     cpu = jax.random.uniform(k_cpu, shape, minval=prm.cpu_lo,
                              maxval=prm.cpu_hi)
     n_base = jax.random.uniform(k_ns, shape, minval=prm.ns_lo,
                                 maxval=prm.ns_hi)
+    if multicell:
+        cell, _ = T.nearest_cell(pos, _bs_of(prm), xp=jnp)
+    else:
+        cell = jnp.zeros(shape, jnp.int32)
     return ScenarioState(pos=pos, aux=aux, speed=speed, fading=fading,
                          shadow_db=shadow, cpu_base=cpu,
                          throttled=jnp.zeros(shape, bool),
-                         n_base=n_base, n_cur=n_base)
+                         n_base=n_base, n_cur=n_base, cell=cell)
 
 
 @functools.partial(jax.jit, static_argnames=("prm",))
 def _step_core(state: ScenarioState, key, *, prm: ScenarioParams):
     k_fade, k_sh, k_mob, k_cpu, k_ns = jax.random.split(key, 5)
 
-    # mobility -> distances (the environment advances, then is observed)
+    # mobility -> association -> distances (the environment advances, then
+    # is observed; under n_cells > 1 the serving BS is re-derived from the
+    # new position, so crossing a Voronoi boundary IS the handover)
+    multicell = prm.n_cells > 1
+    bs = _bs_of(prm) if multicell else None
     pos, aux, speed = state.pos, state.aux, state.speed
     if prm.mobility == "waypoint":
         pos, aux, speed = P.waypoint_step(
             pos, aux, speed, k_mob, move_s=prm.move_s,
             r_min=prm.min_radius_m, r_max=prm.cell_radius_m,
-            v_min=prm.v_min, v_max=prm.v_max)
+            v_min=prm.v_min, v_max=prm.v_max, centers=bs)
     elif prm.mobility == "drift":
-        pos, aux = P.drift_step(pos, aux, move_s=prm.move_s,
-                                r_max=prm.cell_radius_m)
-    dist = P.distances_of(pos, prm.min_radius_m)
+        if multicell:
+            pos, aux = P.drift_step_multicell(
+                pos, aux, bs, move_s=prm.move_s,
+                region_r=T.region_radius(prm.n_cells, prm.cell_layout,
+                                         prm.cell_radius_m),
+                r_min=prm.min_radius_m)
+        else:
+            pos, aux = P.drift_step(pos, aux, move_s=prm.move_s,
+                                    r_max=prm.cell_radius_m,
+                                    r_min=prm.min_radius_m)
+    if multicell:
+        cell, dist = T.nearest_cell(pos, bs, xp=jnp)
+        dist = jnp.maximum(dist, prm.min_radius_m)
+    else:
+        cell = state.cell
+        dist = P.distances_of(pos, prm.min_radius_m)
 
     # channel: fading x path loss x (optional) shadowing
     if prm.channel == "ar1":
@@ -248,10 +322,11 @@ def _step_core(state: ScenarioState, key, *, prm: ScenarioParams):
     new = ScenarioState(pos=pos, aux=aux, speed=speed, fading=fading,
                         shadow_db=shadow, cpu_base=state.cpu_base,
                         throttled=throttled, n_base=state.n_base,
-                        n_cur=n_cur)
+                        n_cur=n_cur, cell=cell)
     env = RoundEnvBatch(gains=gains.astype(jnp.float32),
                         n_samples=n_cur.astype(jnp.float32),
-                        cpu_freq=cpu.astype(jnp.float32))
+                        cpu_freq=cpu.astype(jnp.float32),
+                        cell=cell.astype(jnp.int32))
     return new, env
 
 

@@ -1,0 +1,468 @@
+"""Multi-cell hierarchy tests (DESIGN.md section 10): topology layouts,
+Voronoi handover, the drift reflection bugfix (inner + outer boundary,
+both twins), scenario numeric validation, and the C=1 equivalence
+contract of the cell-partitioned planner in both engines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, NOMAConfig
+from repro.core import engine as E
+from repro.core import plan
+from repro.core.scheduler import RoundEnv
+from repro.sim import (
+    NumpyScenario,
+    as_scenario,
+    bs_layout,
+    get_scenario_config,
+    nearest_cell,
+    region_radius,
+)
+from repro.sim import processes as P
+from repro.sim.scenario import ScenarioConfig, ScenarioParams
+from repro.sim.topology import CellTopology
+
+NCFG = NOMAConfig()
+VEH = get_scenario_config("vehicular")
+
+
+def _env(rng, n, mb=1e6):
+    return RoundEnv(
+        gains=rng.exponential(size=n) * 1e-9,
+        n_samples=rng.uniform(200, 1200, size=n),
+        cpu_freq=rng.uniform(0.5e9, 2e9, size=n),
+        ages=rng.integers(1, 20, size=n).astype(np.float64),
+        model_bits=mb)
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+
+class TestTopology:
+    def test_single_cell_is_origin(self):
+        for layout in ("hex", "grid"):
+            bs = bs_layout(1, layout, 500.0)
+            np.testing.assert_array_equal(bs, np.zeros((1, 2)))
+
+    @pytest.mark.parametrize("layout", ["hex", "grid"])
+    @pytest.mark.parametrize("c", [1, 3, 7, 12])
+    def test_layout_shape_and_spacing(self, layout, c):
+        bs = bs_layout(c, layout, 500.0)
+        assert bs.shape == (c, 2)
+        if c > 1:
+            # all pairwise distances >= the hex-packing distance
+            dd = np.linalg.norm(bs[:, None] - bs[None, :], axis=-1)
+            assert dd[~np.eye(c, dtype=bool)].min() >= np.sqrt(3) * 500 - 1e-6
+        if c > 1 and layout == "hex":
+            # closest-first: site 0 is the origin, site 1 a ring-1
+            # neighbour at sqrt(3) * R (grid layouts with even side have
+            # no origin site)
+            np.testing.assert_allclose(bs[0], 0.0, atol=1e-9)
+            d01 = np.hypot(*(bs[1] - bs[0]))
+            np.testing.assert_allclose(d01, np.sqrt(3.0) * 500.0)
+
+    def test_layout_prefixes_nest(self):
+        big = bs_layout(12, "hex", 500.0)
+        for c in (1, 3, 7):
+            np.testing.assert_array_equal(bs_layout(c, "hex", 500.0),
+                                          big[:c])
+
+    def test_nearest_cell_matches_bruteforce(self):
+        bs = bs_layout(7, "hex", 500.0)
+        rng = np.random.default_rng(0)
+        pos = rng.uniform(-1500, 1500, size=(64, 2))
+        cell, dist = nearest_cell(pos, bs)
+        ref = np.linalg.norm(pos[:, None] - bs[None], axis=-1)
+        np.testing.assert_array_equal(cell, ref.argmin(1))
+        np.testing.assert_allclose(dist, ref.min(1))
+
+    def test_region_radius(self):
+        assert region_radius(1, "hex", 500.0) == 500.0
+        bs = bs_layout(7, "hex", 500.0)
+        expect = np.hypot(bs[:, 0], bs[:, 1]).max() + 500.0
+        np.testing.assert_allclose(region_radius(7, "hex", 500.0), expect)
+
+    def test_cell_topology_validation(self):
+        with pytest.raises(ValueError, match="n_cells"):
+            CellTopology(n_cells=0, layout="hex")
+        with pytest.raises(ValueError, match="layout"):
+            CellTopology(n_cells=3, layout="triangle")
+        with pytest.raises(ValueError, match="n_cells"):
+            FLConfig(n_cells=0)
+        with pytest.raises(ValueError, match="layout"):
+            FLConfig(cell_layout="triangle")
+
+
+# ---------------------------------------------------------------------------
+# drift reflection bugfix (inner + outer boundary, both twins)
+# ---------------------------------------------------------------------------
+
+
+class TestDriftReflection:
+    def test_inner_reflection_single_step(self):
+        """Regression: pre-fix, drift_step only reflected at the OUTER
+        edge, so a client at r=60 moving inward at 30 m/s ended the step
+        at r=30, deep inside the r<50 BS exclusion zone."""
+        pos = jnp.array([[60.0, 0.0]])
+        vel = jnp.array([[-30.0, 0.0]])
+        pos2, vel2 = P.drift_step(pos, vel, move_s=1.0, r_max=500.0,
+                                  r_min=50.0)
+        np.testing.assert_allclose(np.asarray(pos2), [[50.0, 0.0]],
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(vel2), [[30.0, 0.0]])
+
+    def test_outer_reflection_still_works(self):
+        pos = jnp.array([[490.0, 0.0]])
+        vel = jnp.array([[30.0, 0.0]])
+        pos2, vel2 = P.drift_step(pos, vel, move_s=1.0, r_max=500.0,
+                                  r_min=50.0)
+        np.testing.assert_allclose(np.asarray(pos2), [[500.0, 0.0]],
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(vel2), [[-30.0, 0.0]])
+
+    def test_jax_numpy_drift_parity(self):
+        """The fp64 twin's single-cell drift branch computes the exact
+        same reflection formula (fp32-cast parity on random states)."""
+        rng = np.random.default_rng(3)
+        n = 256
+        # radii straddling both boundaries so reflections actually fire
+        r = rng.uniform(40.0, 510.0, n)
+        th = rng.uniform(0, 2 * np.pi, n)
+        pos = np.stack([r * np.cos(th), r * np.sin(th)], -1)
+        vel = rng.uniform(-40, 40, (n, 2))
+        jp, jv = P.drift_step(jnp.asarray(pos, jnp.float32),
+                              jnp.asarray(vel, jnp.float32),
+                              move_s=1.0, r_max=500.0, r_min=50.0)
+        # numpy mirror (numpy_ref.step single-cell drift branch)
+        pos2 = pos + vel * 1.0
+        rr = np.linalg.norm(pos2, axis=-1)
+        hit = (rr > 500.0) | (rr < 50.0)
+        target = np.clip(rr, 50.0, 500.0)
+        np2 = np.where(hit[:, None],
+                       pos2 * (target / np.maximum(rr, 1e-9))[:, None], pos2)
+        nv = np.where(hit[:, None], -vel, vel)
+        np.testing.assert_allclose(np.asarray(jp), np2, rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(jv), nv, rtol=1e-6)
+
+    @pytest.mark.slow
+    def test_rollout_respects_exclusion_zone_jax(self):
+        """Many-round vehicular rollout never penetrates the BS exclusion
+        disc (beyond fp32 rounding of the reflection scaling). Pre-fix,
+        drifting clients sailed straight through r < min_radius."""
+        scn = as_scenario(VEH, NCFG, FLConfig())
+        state, keys = scn.init_and_keys(jax.random.PRNGKey(0), 40, (2, 64))
+        r_min = scn.prm.min_radius_m
+        for i in range(40):
+            state, _ = scn.step(state, keys[i])
+            rr = np.linalg.norm(np.asarray(state.pos), axis=-1)
+            assert rr.min() >= r_min - 1e-3, (i, rr.min())
+
+    def test_rollout_respects_exclusion_zone_numpy(self):
+        scn = NumpyScenario(VEH, NCFG, FLConfig(n_clients=64))
+        rng = np.random.default_rng(0)
+        scn.init(rng, 64)
+        for i in range(40):
+            scn.step(rng)
+            rr = np.linalg.norm(scn.pos, axis=-1)
+            assert rr.min() >= scn.prm.min_radius_m - 1e-3, (i, rr.min())
+
+    def test_multicell_drift_reflects_at_every_bs(self):
+        """drift_step_multicell reflects at the NEAREST BS's disc, not
+        just the origin's."""
+        bs = jnp.asarray(bs_layout(3, "hex", 500.0))
+        b1 = np.asarray(bs)[1]
+        pos = jnp.asarray(b1 + np.array([60.0, 0.0]))[None]
+        vel = jnp.array([[-30.0, 0.0]])
+        pos2, vel2 = P.drift_step_multicell(
+            pos, vel, bs, move_s=1.0,
+            region_r=region_radius(3, "hex", 500.0), r_min=50.0)
+        np.testing.assert_allclose(np.asarray(pos2)[0], b1 + [50.0, 0.0],
+                                   atol=1e-3)
+        np.testing.assert_allclose(np.asarray(vel2), [[30.0, 0.0]])
+
+
+# ---------------------------------------------------------------------------
+# scenario numeric validation + iid fading leaf
+# ---------------------------------------------------------------------------
+
+
+class TestScenarioValidation:
+    @pytest.mark.parametrize("kw,match", [
+        (dict(mobility="drift", speed_mps=(10.0, 5.0)), "v_min <= v_max"),
+        (dict(mobility="drift", speed_mps=(-1.0, 5.0)), "non-negative"),
+        (dict(shadow_sigma_db=-1.0), "shadow_sigma_db"),
+        (dict(shadow_decorr_m=0.0), "shadow_decorr_m"),
+        (dict(move_s=0.0), "move_s"),
+    ])
+    def test_bad_numerics_raise_eagerly(self, kw, match):
+        scfg = dataclasses.replace(ScenarioConfig(), **kw)
+        with pytest.raises(ValueError, match=match):
+            ScenarioParams.from_configs(scfg, NCFG, FLConfig())
+
+    @pytest.mark.slow
+    def test_iid_fading_leaf_is_zero_size(self):
+        """Under channel='iid' block fading carries no state — the AR(1)
+        leaf is (S, N, 0), not a dead (S, N, 2) array."""
+        scn = as_scenario("static_iid", NCFG, FLConfig())
+        state = scn.init(jax.random.PRNGKey(0), (2, 16))
+        assert state.fading.shape == (2, 16, 0)
+        scn2 = as_scenario(VEH, NCFG, FLConfig())
+        state2 = scn2.init(jax.random.PRNGKey(0), (2, 16))
+        assert state2.fading.shape == (2, 16, 2)
+
+
+# ---------------------------------------------------------------------------
+# handover
+# ---------------------------------------------------------------------------
+
+
+class TestHandover:
+    def test_association_changes_exactly_once_on_crossing(self):
+        """A straight-line trajectory crossing one Voronoi boundary hands
+        over exactly once, at the midpoint between the two BSs."""
+        bs = bs_layout(3, "hex", 500.0)
+        p0, p1 = bs[0], bs[1]
+        ts = np.linspace(0.1, 0.9, 33)  # avoid the equidistant midpoint
+        traj = p0[None] + ts[:, None] * (p1 - p0)[None]
+        cells, _ = nearest_cell(traj, bs)
+        changes = int(np.sum(cells[1:] != cells[:-1]))
+        assert changes == 1
+        assert cells[0] == 0 and cells[-1] == 1
+
+    def test_numpy_scenario_counts_handover(self):
+        """Force one client across a Voronoi boundary between steps: the
+        scenario reports exactly that one handover."""
+        fl = FLConfig(n_clients=8, n_cells=3, scenario="vehicular")
+        scn = NumpyScenario(VEH, NCFG, fl)
+        rng = np.random.default_rng(0)
+        scn.init(rng, 8)
+        bs = np.asarray(scn.bs)
+        # park everyone 60 m from their serving BS (outside the exclusion
+        # disc, so zero velocity means zero motion), then teleport client
+        # 0 just across the boundary toward the OTHER of BS 0/1
+        scn.pos = bs[np.asarray(scn.cell)] + np.array([60.0, 5.0])
+        scn.aux = np.zeros_like(scn.pos)
+        scn.cell, d = nearest_cell(scn.pos, bs)
+        scn.distances = np.maximum(d, scn.prm.min_radius_m)
+        before = scn.cell.copy()
+        target = 1 if before[0] != 1 else 0
+        other = 0 if target == 1 else 1
+        scn.pos[0] = 0.55 * (bs[target] - bs[other]) + bs[other]
+        scn.step(rng)
+        assert scn.cell[0] == target
+        # zero velocity => nobody else moved: exactly one handover
+        np.testing.assert_array_equal(scn.cell[1:], before[1:])
+        assert scn.last_handovers == 1
+
+    @pytest.mark.slow
+    def test_age_state_survives_handover(self):
+        """Ages are indexed by client, never by cell: a forced handover
+        between rounds leaves the AoU state machine untouched (age still
+        resets on selection / increments otherwise)."""
+        import dataclasses as dc
+
+        from repro.configs import get_config
+        from repro.data import TaskConfig
+        from repro.fl import FLServer
+
+        tiny = dc.replace(get_config("smollm_135m").reduced(),
+                          d_model=32, d_ff=64, vocab_size=32, n_layers=2)
+        task = TaskConfig(vocab_size=32, n_topics=4, seq_len=17, seed=0)
+        fl = FLConfig(n_clients=8, rounds=2, local_epochs=1, local_batch=8,
+                      lr=0.2, samples_per_client=(24, 48), seed=0,
+                      n_cells=3, scenario="vehicular")
+        srv = FLServer(tiny, fl, NOMAConfig(n_subchannels=2), task,
+                       policy="age_noma")
+        srv.run_round()
+        ages_before = srv.ages.copy()
+        # teleport client 0 across a boundary before the next round
+        bs = np.asarray(srv.scenario.bs)
+        cur = int(srv.scenario.cell[0])
+        target = (cur + 1) % 3
+        srv.scenario.pos[0] = 0.55 * (bs[target] - bs[cur]) + bs[cur]
+        sched = srv.run_round()
+        assert int(srv.scenario.cell[0]) == target  # handover happened
+        expect = np.where(sched.selected, 1, ages_before + 1)
+        np.testing.assert_array_equal(srv.ages, expect)
+
+    @pytest.mark.slow
+    def test_fused_montecarlo_reports_handovers(self):
+        ncfg = NOMAConfig()
+        fl = FLConfig(n_cells=3)
+        eng = E.WirelessEngine(ncfg, fl)
+        scn = as_scenario(VEH, ncfg, fl)
+        out = eng.montecarlo_scenario(scn, rounds=5, n_seeds=2,
+                                      n_clients=48, model_bits=1e6, seed=0)
+        ho = np.asarray(out["handovers"])
+        assert ho.shape == (5, 2)
+        assert np.all(ho[0] == 0)  # round 0 has no previous association
+        assert np.all(np.isfinite(np.asarray(out["t_round"])))
+        # single-cell runs must NOT grow the new key
+        eng1 = E.WirelessEngine(ncfg, FLConfig())
+        scn1 = as_scenario(VEH, ncfg, FLConfig())
+        out1 = eng1.montecarlo_scenario(scn1, rounds=3, n_seeds=2,
+                                        n_clients=48, model_bits=1e6,
+                                        seed=0)
+        assert "handovers" not in out1
+
+
+# ---------------------------------------------------------------------------
+# cell-partitioned planner: C=1 equivalence + C>1 parity
+# ---------------------------------------------------------------------------
+
+
+class TestCellCapacity:
+    def test_single_cell_is_n(self):
+        assert plan.cell_capacity(1000, 1, 10) == 1000
+
+    def test_bounds(self):
+        # cap >= 2 * ceil(n / c) (absorbs 2x imbalance) and >= 2 * slots
+        assert plan.cell_capacity(1000, 4, 10) == 500
+        assert plan.cell_capacity(100, 50, 10) == 20
+        # never exceeds n
+        assert plan.cell_capacity(12, 2, 10) == 12
+
+
+class TestSingleCellEquivalence:
+    def test_numpy_c1_delegates_bitwise(self):
+        rng = np.random.default_rng(5)
+        env = _env(rng, 48)
+        fl = FLConfig()
+        prio = plan.age_score(env, fl)
+        a = plan.plan_round(env, NCFG, fl, priority=prio)
+        b = plan.plan_multicell(env, np.zeros(48, int), 1, NCFG, fl,
+                                priority=prio)
+        np.testing.assert_array_equal(a.selected, b.selected)
+        np.testing.assert_array_equal(a.rates, b.rates)
+        assert a.pairs == b.pairs and a.t_round == b.t_round
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("selection", ["greedy_set", "joint"])
+    def test_engine_c1_multicell_core_bitwise(self, selection):
+        """The cell-blocked engine path at n_cells=1 (identity member
+        table, cap=n) is bitwise the single-cell fast path."""
+        rng = np.random.default_rng(6)
+        b, n = 3, 48
+        gains = (rng.exponential(size=(b, n)) * 1e-9).astype(np.float32)
+        ns = rng.uniform(200, 1200, (b, n)).astype(np.float32)
+        cpu = rng.uniform(0.5e9, 2e9, (b, n)).astype(np.float32)
+        ages = rng.integers(1, 20, (b, n)).astype(np.float32)
+        fl = FLConfig(selection=selection)
+        eng = E.WirelessEngine(NCFG, fl)
+        ref = eng.schedule_batch(gains, ns, cpu, ages, 1e6)
+        out = E._multicell_schedule_core(
+            eng.age_priority(jnp.asarray(ages), jnp.asarray(ns),
+                             jnp.asarray(gains)),
+            jnp.asarray(gains),
+            eng.compute_times(jnp.asarray(ns), jnp.asarray(cpu)),
+            jnp.asarray(ns),
+            jnp.broadcast_to(jnp.asarray(1e6, jnp.float32), (b,)),
+            jnp.zeros((b,), jnp.float32),
+            jnp.zeros((b, n), jnp.int32),
+            prm=eng.prm, oma=False, pairing=eng.pairing,
+            selection=selection, admission="full_sort", n_cells=1,
+            cap=plan.cell_capacity(n, 1, eng.prm.slots), budget=False)
+        for f in ("selected", "rates", "powers", "t_round", "agg_weights",
+                  "t_com"):
+            np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                          np.asarray(getattr(out, f)), f)
+        for bi in range(b):
+            pr = {(int(i), int(j)) for i, j in
+                  zip(np.asarray(ref.pair_strong[bi]),
+                      np.asarray(ref.pair_weak[bi])) if i >= 0}
+            po = {(int(i), int(j)) for i, j in
+                  zip(np.asarray(out.pair_strong[bi]),
+                      np.asarray(out.pair_weak[bi])) if i >= 0}
+            assert pr == po
+
+    @pytest.mark.slow
+    def test_schedule_batch_c1_ignores_cell(self):
+        rng = np.random.default_rng(7)
+        b, n = 2, 32
+        gains = (rng.exponential(size=(b, n)) * 1e-9).astype(np.float32)
+        ns = rng.uniform(200, 1200, (b, n)).astype(np.float32)
+        cpu = rng.uniform(0.5e9, 2e9, (b, n)).astype(np.float32)
+        ages = rng.integers(1, 20, (b, n)).astype(np.float32)
+        eng = E.WirelessEngine(NCFG, FLConfig())
+        a = eng.schedule_batch(gains, ns, cpu, ages, 1e6, t_budget=0.5)
+        c = eng.schedule_batch(gains, ns, cpu, ages, 1e6, t_budget=0.5,
+                               cell=np.zeros((b, n), np.int32), n_cells=1)
+        np.testing.assert_array_equal(np.asarray(a.selected),
+                                      np.asarray(c.selected))
+        np.testing.assert_array_equal(np.asarray(a.t_round),
+                                      np.asarray(c.t_round))
+
+
+@pytest.mark.slow
+class TestMulticellParity:
+    @pytest.mark.parametrize("selection", ["greedy_set", "joint"])
+    @pytest.mark.parametrize("tb", [0.0, 0.6])
+    def test_engine_matches_numpy_planner_c3(self, selection, tb):
+        """Full-cell C=3 parity: same selected set, pairs, rates, weights
+        and round time as the fp64 cell-partitioned reference."""
+        rng = np.random.default_rng(1)
+        n, c = 120, 3
+        env = _env(rng, n)
+        cellv = rng.integers(0, c, size=n).astype(np.int32)
+        fl = FLConfig(selection=selection)
+        eng = E.WirelessEngine(NCFG, fl)
+        prio = plan.age_score(env, fl)
+        ref = plan.plan_multicell(env, cellv, c, NCFG, fl, priority=prio,
+                                  t_budget=(None if tb == 0.0 else tb))
+        out = eng.schedule_batch(
+            env.gains[None].astype(np.float32),
+            env.n_samples[None].astype(np.float32),
+            env.cpu_freq[None].astype(np.float32),
+            env.ages[None].astype(np.float32), env.model_bits,
+            t_budget=tb, cell=cellv[None], n_cells=c)
+        sel_np = np.flatnonzero(ref.selected)
+        np.testing.assert_array_equal(
+            sel_np, np.flatnonzero(np.asarray(out.selected[0])))
+        np.testing.assert_allclose(np.asarray(out.rates[0])[sel_np],
+                                   ref.rates[sel_np], rtol=2e-5)
+        np.testing.assert_allclose(float(out.t_round[0]), ref.t_round,
+                                   rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(out.agg_weights[0]),
+                                   ref.agg_weights, rtol=2e-5, atol=1e-8)
+        pr = {(i, j) for i, j in ref.pairs if i >= 0}
+        po = {(int(i), int(j)) for i, j in
+              zip(np.asarray(out.pair_strong[0]),
+                  np.asarray(out.pair_weak[0])) if i >= 0}
+        assert pr == po
+
+    def test_fused_equals_presampled_c3(self):
+        ncfg = NOMAConfig()
+        fl = FLConfig(n_cells=3)
+        eng = E.WirelessEngine(ncfg, fl)
+        scn = as_scenario(VEH, ncfg, fl)
+        k = jax.random.PRNGKey(0)
+        envs = scn.rollout(k, 5, (2, 64))
+        fused = eng.montecarlo_scenario(scn, rounds=5, n_seeds=2,
+                                        n_clients=64, model_bits=1e6,
+                                        seed=0, key=k)
+        pres = eng.montecarlo_rounds(np.asarray(envs.gains),
+                                     np.asarray(envs.n_samples),
+                                     np.asarray(envs.cpu_freq), 1e6,
+                                     seed=0,
+                                     cell_seq=np.asarray(envs.cell))
+        assert sorted(fused) == sorted(pres)
+        for kk in fused:
+            np.testing.assert_array_equal(np.asarray(fused[kk]),
+                                          np.asarray(pres[kk]), kk)
+
+    def test_run_montecarlo_c3_end_to_end(self):
+        from repro.fl.rounds import run_montecarlo
+        fl = FLConfig(n_cells=3)
+        res = run_montecarlo(NOMAConfig(), fl, n_clients=48, n_seeds=2,
+                             rounds=3, scenario="vehicular",
+                             policies=("age_noma", "age_noma_budget"))
+        assert res["meta"]["n_cells"] == 3
+        for p in ("age_noma", "age_noma_budget"):
+            s = res["summary"][p]
+            assert "handover_rate" in s and s["handover_rate"] >= 0.0
+            assert np.all(np.isfinite(res[p]["t_round"]))
