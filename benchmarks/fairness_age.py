@@ -3,6 +3,7 @@ participation fairness (Jain index) per policy over a long horizon —
 wireless layer only (no training) so the horizon can be long."""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
@@ -25,7 +26,10 @@ def jain(x):
     return float(x.sum() ** 2 / (len(x) * (x ** 2).sum() + 1e-12))
 
 
-def run(out_dir="experiments/bench", rounds=200, n_clients=30, seed=0):
+def run(*, smoke=False, out_path=None, seed=0, rounds=None, n_clients=30):
+    import jax
+
+    rounds = (50 if smoke else 200) if rounds is None else rounds
     ncfg, fl = NOMAConfig(), FLConfig()
     rng_master = np.random.default_rng(seed)
     d = noma.sample_distances(rng_master, n_clients, ncfg)
@@ -62,16 +66,39 @@ def run(out_dir="experiments/bench", rounds=200, n_clients=30, seed=0):
             "mean_round_s": float(np.mean(times)),
         })
 
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "fairness_age.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    result = {
+        "benchmark": "fairness_age",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    }
+    out_path = out_path or os.path.join("experiments", "bench",
+                                        "BENCH_fairness_age.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
     print("name,policy,max_age_p99,jain,never_selected,mean_round_s")
     for r in rows:
         print(f"fairness_age,{r['policy']},{r['max_age_p99']:.1f},"
               f"{r['jain_participation']:.3f},{r['clients_never_selected']},"
               f"{r['mean_round_s']:.3f}")
-    return rows
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
 
 
 if __name__ == "__main__":
-    run()
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    main()

@@ -3,6 +3,7 @@ wall-clock for every selection policy, paired topology/data across policies.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
 import os
@@ -15,8 +16,10 @@ from repro.data import TaskConfig, bayes_optimal_accuracy
 from repro.fl import POLICIES, compare_policies, time_to_accuracy
 
 
-def run(out_dir="experiments/bench", rounds=40, clients=24, seed=0,
-        quick=False):
+def run(*, smoke=False, out_path=None, seed=0, rounds=None, clients=24):
+    import jax
+
+    rounds = (10 if smoke else 40) if rounds is None else rounds
     cfg = dataclasses.replace(get_config("smollm_135m").reduced(),
                               d_model=64, d_ff=128, vocab_size=64)
     # alpha=0.1: near-single-topic clients — the paper's non-IID regime
@@ -26,7 +29,7 @@ def run(out_dir="experiments/bench", rounds=40, clients=24, seed=0,
                   dirichlet_alpha=0.1, seed=seed)
     ncfg = NOMAConfig()
     task = TaskConfig(vocab_size=64, n_topics=8, seq_len=33, seed=seed)
-    policies = ("age_noma", "channel") if quick else POLICIES
+    policies = ("age_noma", "channel") if smoke else POLICIES
 
     t0 = time.time()
     hists = compare_policies(cfg, fl, ncfg, task, policies=policies,
@@ -49,19 +52,44 @@ def run(out_dir="experiments/bench", rounds=40, clients=24, seed=0,
             "time_to_half_bayes_s": tta,
         })
 
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "fl_convergence.json"), "w") as f:
-        json.dump({"bayes_acc": bayes, "target_acc": target, "rows": rows,
-                   "histories": {p: h.as_dict() for p, h in hists.items()},
-                   "wall_s": wall}, f, indent=1)
+    result = {
+        "benchmark": "fl_convergence",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+        "bayes_acc": bayes,
+        "target_acc": target,
+        "histories": {p: h.as_dict() for p, h in hists.items()},
+        "wall_s": wall,
+    }
+    out_path = out_path or os.path.join("experiments", "bench",
+                                        "BENCH_fl_convergence.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
 
     print("name,policy,final_acc,sim_time_s,max_age,tta_s")
     for r in rows:
         print(f"fl_convergence,{r['policy']},{r['final_acc']:.4f},"
               f"{r['sim_time_s']:.1f},{r['max_age']},"
               f"{r['time_to_half_bayes_s']}")
-    return rows
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer rounds + two policies for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
 
 
 if __name__ == "__main__":
-    run()
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    main()

@@ -4,6 +4,7 @@ EXPERIMENTS.md) plus derived arithmetic-intensity metadata for the roofline
 narrative."""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -24,15 +25,18 @@ def _time(fn, *args, reps=5, **kw):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(out_dir="experiments/bench"):
+def run(*, smoke=False, out_path=None, seed=0):
+    # smoke only cuts reps — shapes stay identical to the full run so the
+    # regression gate can match rows against committed baselines
+    reps = 2 if smoke else 5
     rows = []
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
 
     # fedagg: 10 clients x 1M-param update
     c, n = 10, 1 << 20
     u = jax.random.normal(key, (c, n), jnp.float32)
-    w = jax.random.uniform(jax.random.PRNGKey(1), (c,))
-    us_xla = _time(lambda: ops.weighted_sum(u, w, impl="xla"))
+    w = jax.random.uniform(jax.random.PRNGKey(seed + 1), (c,))
+    us_xla = _time(lambda: ops.weighted_sum(u, w, impl="xla"), reps=reps)
     flops = c * n * 2
     bytes_ = (c * n + n) * 4
     rows.append({"kernel": "fedagg", "shape": f"{c}x{n}",
@@ -50,8 +54,8 @@ def run(out_dir="experiments/bench"):
     from repro.kernels.ref import wkv6_ref
     s0 = jnp.zeros((b, h, cd, cd))
     us_chunk = _time(jax.jit(lambda *a: wkv6_chunked(*a, chunk=64)),
-                     r, k2, v, wl, uu, s0)
-    us_naive = _time(jax.jit(wkv6_ref), r, k2, v, wl, uu, s0)
+                     r, k2, v, wl, uu, s0, reps=reps)
+    us_naive = _time(jax.jit(wkv6_ref), r, k2, v, wl, uu, s0, reps=reps)
     rows.append({"kernel": "wkv6", "shape": f"{b}x{h}x{t}x{cd}",
                  "us_chunked_cpu": us_chunk, "us_naive_cpu": us_naive,
                  "chunked_speedup_cpu": us_naive / us_chunk})
@@ -62,20 +66,44 @@ def run(out_dir="experiments/bench"):
     q = jax.random.normal(ks[0], (b, s, hh, hd))
     kk = jax.random.normal(ks[1], (b, s, kh, hd))
     vv = jax.random.normal(ks[2], (b, s, kh, hd))
-    us_swa = _time(jax.jit(lambda *a: swa_ref(*a, win)), q, kk, vv)
+    us_swa = _time(jax.jit(lambda *a: swa_ref(*a, win)), q, kk, vv,
+                   reps=reps)
     rows.append({"kernel": "swa", "shape": f"s{s}w{win}",
                  "us_ref_cpu": us_swa,
                  "flops_vs_full": win / s})
 
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "kernels.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    result = {
+        "benchmark": "kernels",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    }
+    out_path = out_path or os.path.join("experiments", "bench",
+                                        "BENCH_kernels.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
     for r_ in rows:
         us = r_.get("us_xla_cpu") or r_.get("us_chunked_cpu") \
             or r_.get("us_ref_cpu")
         print(f"kernel_{r_['kernel']},{r_['shape']},{us:.1f}us")
-    return rows
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller shapes + fewer reps for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
 
 
 if __name__ == "__main__":
-    run()
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    main()

@@ -3,6 +3,7 @@ allocation across payload sizes and client counts (pure wireless layer — no
 training, thousands of Monte-Carlo rounds)."""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
@@ -12,7 +13,10 @@ from repro.configs import FLConfig, NOMAConfig
 from repro.core import RoundEnv, aoi, noma, schedule_age_noma
 
 
-def run(out_dir="experiments/bench", trials=300, seed=0):
+def run(*, smoke=False, out_path=None, seed=0, trials=None):
+    import jax
+
+    trials = (50 if smoke else 300) if trials is None else trials
     fl = FLConfig()
     rows = []
     for n_clients in (10, 20, 40):
@@ -41,16 +45,39 @@ def run(out_dir="experiments/bench", trials=300, seed=0):
                                                 >= np.array(t_noma))),
             })
 
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "noma_vs_oma.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    result = {
+        "benchmark": "noma_vs_oma",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    }
+    out_path = out_path or os.path.join("experiments", "bench",
+                                        "BENCH_noma_vs_oma.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
     print("name,n_clients,model_mbit,t_noma_s,t_oma_s,speedup")
     for r in rows:
         print(f"noma_vs_oma,{r['n_clients']},{r['model_mbit']},"
               f"{r['t_noma_mean']:.3f},{r['t_oma_mean']:.3f},"
               f"{r['speedup']:.3f}")
-    return rows
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer Monte-Carlo trials for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
 
 
 if __name__ == "__main__":
-    run()
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    main()

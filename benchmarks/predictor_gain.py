@@ -12,6 +12,7 @@ non-IID config (the ANN recovers part of the unseen clients' signal).
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
 import os
@@ -26,8 +27,10 @@ from repro.fl import compare_predictors
 MODES = ("none", "stale", "ann")
 
 
-def run(out_dir="experiments/bench", rounds=40, clients=24, seed=0,
-        quick=False):
+def run(*, smoke=False, out_path=None, seed=0, rounds=None, clients=24):
+    import jax
+
+    rounds = (10 if smoke else 40) if rounds is None else rounds
     cfg = dataclasses.replace(get_config("smollm_135m").reduced(),
                               d_model=64, d_ff=128, vocab_size=64)
     # alpha=0.1 near-single-topic clients: an unselected client's update is
@@ -38,8 +41,6 @@ def run(out_dir="experiments/bench", rounds=40, clients=24, seed=0,
                   dirichlet_alpha=0.1, seed=seed)
     ncfg = NOMAConfig()
     task = TaskConfig(vocab_size=64, n_topics=8, seq_len=33, seed=seed)
-    if quick:
-        rounds = min(rounds, 10)
 
     t0 = time.time()
     hists = compare_predictors(cfg, fl, ncfg, task, policy="age_noma",
@@ -61,11 +62,20 @@ def run(out_dir="experiments/bench", rounds=40, clients=24, seed=0,
             "mean_pred_error": float(np.mean(perr)) if perr else None,
         })
 
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "predictor_gain.json"), "w") as f:
-        json.dump({"bayes_acc": bayes, "rows": rows,
-                   "histories": {m: h.as_dict() for m, h in hists.items()},
-                   "wall_s": wall}, f, indent=1)
+    result = {
+        "benchmark": "predictor_gain",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+        "bayes_acc": bayes,
+        "histories": {m: h.as_dict() for m, h in hists.items()},
+        "wall_s": wall,
+    }
+    out_path = out_path or os.path.join("experiments", "bench",
+                                        "BENCH_predictor_gain.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
 
     print("name,predictor,final_acc,mean_aou,mean_n_predicted,"
           "mean_pred_error")
@@ -77,9 +87,23 @@ def run(out_dir="experiments/bench", rounds=40, clients=24, seed=0,
     by = {r["predictor"]: r for r in rows}
     gain = by["ann"]["final_acc"] - by["none"]["final_acc"]
     print(f"ann_gain_over_none,{gain:+.4f}")
-    return rows
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer rounds for CI")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
 
 
 if __name__ == "__main__":
+    import pathlib
     import sys
-    run(quick="--quick" in sys.argv)
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    main()

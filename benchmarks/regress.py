@@ -1,0 +1,132 @@
+"""Bench-regression gate: compare freshly generated BENCH_*.json files
+against the committed baselines in experiments/bench/ and fail (exit 1)
+when any throughput metric collapses.
+
+    PYTHONPATH=src python -m benchmarks.regress --fresh /tmp/bench-smoke
+
+Gate semantics (DESIGN.md section 11):
+  * files are matched by basename (``BENCH_engine_throughput.json`` ...);
+    a fresh file with no committed baseline is reported as NEW, a baseline
+    with no fresh counterpart as MISSING — neither fails the gate;
+  * rows are matched by identity keys (``n``, ``k``, ``policy``,
+    ``scenario``, ``kernel``/``shape``, ...) — never by position, so a
+    smoke run that sweeps a subset of the full grid still gates the rows
+    it does produce; unmatched rows are reported, not failed;
+  * only throughput keys (name contains ``per_s``, higher is better) are
+    gated: fresh/baseline < ``--min-ratio`` (default 0.5, i.e. a >2x
+    collapse) fails.  Latency-style keys are machine-dependent noise on
+    shared CI runners and are deliberately not gated.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# keys that identify WHICH configuration a row measured (never perf values,
+# and never sweep-size knobs like drops/rounds/trials that --smoke shrinks)
+ID_KEYS = ("kernel", "shape", "policy", "predictor", "scenario", "pairing",
+           "selection", "mode", "n", "k", "n_clients", "n_cells",
+           "model_mbit")
+
+# gated metric: any numeric row key whose name contains this (higher=better)
+GATE_SUBSTR = "per_s"
+
+
+def load_rows(path):
+    """Rows from a BENCH file: envelope ``{"rows": [...]}`` or bare list."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):
+        return doc
+    return doc.get("rows", [])
+
+
+def row_id(row):
+    return tuple((k, row[k]) for k in ID_KEYS if k in row)
+
+
+def compare_rows(fname, fresh_rows, base_rows, min_ratio):
+    """Return (failures, report_lines) for one benchmark file."""
+    base_by_id = {row_id(r): r for r in base_rows}
+    fresh_by_id = {row_id(r): r for r in fresh_rows}
+    failures, lines = [], []
+    for rid, fr in fresh_by_id.items():
+        br = base_by_id.get(rid)
+        ident = ",".join(f"{k}={v}" for k, v in rid) or "<row>"
+        if br is None:
+            lines.append(f"  {fname} {ident}: no baseline row (skipped)")
+            continue
+        for key in sorted(fr):
+            if GATE_SUBSTR not in key or key not in br:
+                continue
+            fv, bv = fr[key], br[key]
+            if not (isinstance(fv, (int, float))
+                    and isinstance(bv, (int, float)) and bv > 0):
+                continue
+            ratio = fv / bv
+            ok = ratio >= min_ratio
+            lines.append(f"  {fname} {ident} {key}: "
+                         f"{bv:.3g} -> {fv:.3g} (x{ratio:.2f})"
+                         f"{'' if ok else '  REGRESSION'}")
+            if not ok:
+                failures.append((fname, ident, key, bv, fv, ratio))
+    for rid in base_by_id.keys() - fresh_by_id.keys():
+        ident = ",".join(f"{k}={v}" for k, v in rid) or "<row>"
+        lines.append(f"  {fname} {ident}: baseline row not in fresh run "
+                     f"(skipped)")
+    return failures, lines
+
+
+def run(fresh_dir, baseline_dir="experiments/bench", min_ratio=0.5):
+    fresh = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
+    if not fresh:
+        print(f"regress: no BENCH_*.json under {fresh_dir}")
+        return 1
+    failures = []
+    for fpath in fresh:
+        fname = os.path.basename(fpath)
+        bpath = os.path.join(baseline_dir, fname)
+        if not os.path.exists(bpath):
+            print(f"{fname}: NEW (no committed baseline)")
+            continue
+        fails, lines = compare_rows(fname, load_rows(fpath),
+                                    load_rows(bpath), min_ratio)
+        print(f"{fname}:")
+        for line in lines:
+            print(line)
+        failures.extend(fails)
+    fresh_names = {os.path.basename(p) for p in fresh}
+    for bpath in sorted(glob.glob(os.path.join(baseline_dir,
+                                               "BENCH_*.json"))):
+        if os.path.basename(bpath) not in fresh_names:
+            print(f"{os.path.basename(bpath)}: MISSING from fresh run")
+    if failures:
+        print(f"\nregress: {len(failures)} throughput regression(s) "
+              f"below x{min_ratio}:")
+        for fname, ident, key, bv, fv, ratio in failures:
+            print(f"  {fname} {ident} {key}: {bv:.3g} -> {fv:.3g} "
+                  f"(x{ratio:.2f})")
+        return 1
+    print(f"\nregress: ok ({len(fresh)} fresh files gated at "
+          f"x{min_ratio})")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, metavar="DIR",
+                    help="directory of freshly generated BENCH_*.json")
+    ap.add_argument("--baseline", default="experiments/bench", metavar="DIR",
+                    help="committed baseline directory")
+    ap.add_argument("--min-ratio", type=float, default=0.5,
+                    help="fail when fresh/baseline throughput drops below "
+                         "this (default 0.5 = a >2x collapse)")
+    args = ap.parse_args()
+    sys.exit(run(args.fresh, args.baseline, args.min_ratio))
+
+
+if __name__ == "__main__":
+    main()

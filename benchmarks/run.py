@@ -2,7 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only NAME]
 
-Prints ``name,...`` CSV rows; writes JSON artifacts to experiments/bench/.
+Prints ``name,...`` CSV rows; writes JSON artifacts to experiments/bench/
+(or ``--out-dir DIR`` — CI uses a scratch dir so smoke numbers never
+overwrite the committed full-run baselines, then gates them with
+``benchmarks/regress.py``). Each sweep also appends a JSONL run ledger
+under experiments/runs/ (disable with REPRO_LEDGER=0).
 ``--smoke`` is the CI alias of ``--quick``; ``--check-registry`` verifies
 (without running anything) that every ``benchmarks/*.py`` module is
 registered in ``BENCHES`` — the engine-bench CI job runs it so a new
@@ -25,6 +29,7 @@ Claim mapping (DESIGN.md section 1):
 from __future__ import annotations
 
 import argparse
+import os
 import pathlib
 import sys
 import time
@@ -45,30 +50,37 @@ from benchmarks import (
     scenario_throughput,
 )
 
+# every entry takes (quick, out): ``out`` is the JSON output path, or None
+# for each module's default under experiments/bench/
 BENCHES = {
-    "engine_throughput": lambda quick: engine_throughput.run(smoke=quick),
-    "admission_scaling": lambda quick: admission_scaling.run(smoke=quick),
-    "scenario_throughput": lambda quick: scenario_throughput.run(
-        smoke=quick),
-    "multicell_scaling": lambda quick: multicell_scaling.run(smoke=quick),
-    "noma_vs_oma": lambda quick: noma_vs_oma.run(
-        trials=50 if quick else 300),
-    "fairness_age": lambda quick: fairness_age.run(
-        rounds=50 if quick else 200),
-    "pairing_optimality": lambda quick: pairing_optimality.run(
-        trials=30 if quick else 200),
-    "joint_selection": lambda quick: joint_selection.run(
-        trials=30 if quick else 200, smoke=quick),
-    "kernels": lambda quick: kernels_bench.run(),
-    "fl_convergence": lambda quick: fl_convergence.run(
-        rounds=10 if quick else 40, quick=quick),
-    "predictor_gain": lambda quick: predictor_gain.run(
-        rounds=10 if quick else 40, quick=quick),
-    "roofline": lambda quick: roofline_table.run(),
+    "engine_throughput": lambda quick, out: engine_throughput.run(
+        smoke=quick, out_path=out),
+    "admission_scaling": lambda quick, out: admission_scaling.run(
+        smoke=quick, out_path=out),
+    "scenario_throughput": lambda quick, out: scenario_throughput.run(
+        smoke=quick, out_path=out),
+    "multicell_scaling": lambda quick, out: multicell_scaling.run(
+        smoke=quick, out_path=out),
+    "noma_vs_oma": lambda quick, out: noma_vs_oma.run(
+        smoke=quick, out_path=out),
+    "fairness_age": lambda quick, out: fairness_age.run(
+        smoke=quick, out_path=out),
+    "pairing_optimality": lambda quick, out: pairing_optimality.run(
+        smoke=quick, out=out),
+    "joint_selection": lambda quick, out: joint_selection.run(
+        smoke=quick, out=out),
+    "kernels": lambda quick, out: kernels_bench.run(
+        smoke=quick, out_path=out),
+    "fl_convergence": lambda quick, out: fl_convergence.run(
+        smoke=quick, out_path=out),
+    "predictor_gain": lambda quick, out: predictor_gain.run(
+        smoke=quick, out_path=out),
+    "roofline": lambda quick, out: roofline_table.run(
+        out_dir=os.path.dirname(out) if out else "experiments/bench"),
 }
 
 # modules in benchmarks/ that are not benchmarks themselves
-_NON_BENCH = {"run", "__init__"}
+_NON_BENCH = {"run", "__init__", "regress"}
 # registry name -> module name where they differ
 _ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_table"}
 
@@ -95,6 +107,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="alias of --quick (CI naming)")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--out-dir", default=None, metavar="DIR",
+                    help="write BENCH_*.json here instead of "
+                         "experiments/bench/ (CI scratch dir)")
     ap.add_argument("--check-registry", action="store_true",
                     help="verify every benchmarks/*.py module is "
                          "registered, run nothing")
@@ -103,19 +118,34 @@ def main() -> None:
         check_registry()
         return
     quick = args.quick or args.smoke
+    if args.out_dir:
+        os.makedirs(args.out_dir, exist_ok=True)
+
+    from repro.obs import RunLedger
 
     failed = []
-    for name, fn in BENCHES.items():
-        if args.only and name != args.only:
-            continue
-        t0 = time.time()
-        print(f"# === {name} ===", flush=True)
-        try:
-            fn(quick)
-        except Exception:  # noqa: BLE001
-            traceback.print_exc()
-            failed.append(name)
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    ledger = RunLedger.open("bench_suite", {
+        "quick": quick, "only": args.only, "out_dir": args.out_dir})
+    try:
+        for name, fn in BENCHES.items():
+            if args.only and name != args.only:
+                continue
+            out = (os.path.join(args.out_dir, f"BENCH_{name}.json")
+                   if args.out_dir else None)
+            t0 = time.time()
+            print(f"# === {name} ===", flush=True)
+            try:
+                fn(quick, out)
+                ok = True
+            except Exception:  # noqa: BLE001
+                traceback.print_exc()
+                failed.append(name)
+                ok = False
+            wall = time.time() - t0
+            ledger.event("bench", name=name, ok=ok, wall_s=round(wall, 3))
+            print(f"# {name} done in {wall:.1f}s", flush=True)
+    finally:
+        ledger.close()
     if failed:
         print("FAILED:", failed)
         sys.exit(1)

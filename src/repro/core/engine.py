@@ -61,6 +61,8 @@ from repro.core.plan import (
     resolve_admission,
 )
 from repro.kernels import pairscore
+from repro.obs import trace
+from repro.obs.metrics import AOU_BUCKET_EDGES
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +118,57 @@ class EngineSchedule(NamedTuple):
     t_round: jax.Array       # (B,)   f32 s
     agg_weights: jax.Array   # (B, N) f32
     evicted: jax.Array       # (B, N) bool (budget-loop evictions)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics (numpy reference: ``plan.schedule_diag``)
+# ---------------------------------------------------------------------------
+
+
+def _aou_histogram(ages):
+    """Fixed-shape AoU bucket counts, jax twin of
+    ``metrics.aou_histogram``: ages (..., N) -> int32 counts
+    (..., len(AOU_BUCKET_EDGES) + 1), identical bucketing (bucket i is
+    ages in (edge[i-1], edge[i]], last bucket > edge[-1])."""
+    edges = jnp.asarray(AOU_BUCKET_EDGES, jnp.float32)
+    idx = jnp.sum(ages[..., None] > edges, axis=-1)
+    k = len(AOU_BUCKET_EDGES) + 1
+    one_hot = (idx[..., None] == jnp.arange(k)).astype(jnp.int32)
+    return jnp.sum(one_hot, axis=-2)
+
+
+def schedule_diag(out: EngineSchedule, ages=None, *, cell=None,
+                  n_cells: int = 1) -> dict:
+    """Per-round diagnostics of an ``EngineSchedule`` — jax twin of
+    ``plan.schedule_diag`` with a leading batch dim on every leaf
+    (parity-tested leaf-for-leaf; jittable — pure jnp ops on fixed
+    shapes). Leaves: t_round/t_comp_bottleneck/t_up_bottleneck (B,) f32,
+    n_selected/n_evicted (B,) int32, plus aou_hist (B, 7) int32 when
+    ``ages`` is given and sel_per_cell (B, n_cells) int32 when a cell map
+    is given. The numpy-only ``joint_swaps_accepted`` leaf has no jax twin
+    (the engine's joint refinement is branch-free; DESIGN.md section 11).
+    """
+    sel = out.selected
+    tot = jnp.where(sel, out.t_cmp + out.t_com, 0.0)
+    bi = jnp.argmax(tot, axis=-1)
+    any_sel = jnp.any(sel, axis=-1)
+    take = lambda a: jnp.where(
+        any_sel, jnp.take_along_axis(a, bi[..., None], axis=-1)[..., 0], 0.0)
+    diag = {
+        "t_round": out.t_round,
+        "t_comp_bottleneck": take(out.t_cmp),
+        "t_up_bottleneck": take(out.t_com),
+        "n_selected": jnp.sum(sel, axis=-1).astype(jnp.int32),
+        "n_evicted": jnp.sum(out.evicted, axis=-1).astype(jnp.int32),
+    }
+    if ages is not None:
+        diag["aou_hist"] = _aou_histogram(jnp.asarray(ages, jnp.float32))
+    if cell is not None and n_cells > 1:
+        one_hot = (jnp.asarray(cell)[..., None]
+                   == jnp.arange(n_cells)).astype(jnp.int32)
+        diag["sel_per_cell"] = jnp.sum(
+            jnp.where(sel[..., None], one_hot, 0), axis=-2)
+    return diag
 
 
 # ---------------------------------------------------------------------------
@@ -1413,6 +1466,34 @@ class WirelessEngine:
         all visible devices via jit sharding — on CPU run with
         ``XLA_FLAGS=--xla_force_host_platform_device_count=<cores>``.
         """
+        b, n = np.shape(gains)
+        no_budget = (isinstance(t_budget, (int, float))
+                     and float(t_budget) <= 0.0)
+        sig = ("schedule_batch", b, n, no_budget, oma,
+               pairing or self.pairing, selection or self.selection,
+               admission or self.admission,
+               (self.flcfg.n_cells if n_cells is None else n_cells)
+               if cell is not None else 1,
+               priority is None, self.use_pallas)
+        with trace.span("engine.schedule_batch", b=b, n=n,
+                        cold=trace.cold(sig)) as sp:
+            out = self._schedule_batch_impl(
+                gains, n_samples, cpu_freq, ages, model_bits,
+                t_budget=t_budget, oma=oma, priority=priority, shard=shard,
+                pairing=pairing, selection=selection, admission=admission,
+                cell=cell, n_cells=n_cells)
+            sp.fence(out.t_round)
+            return out
+
+    def _schedule_batch_impl(self, gains, n_samples, cpu_freq, ages,
+                             model_bits, *, t_budget=0.0, oma: bool = False,
+                             priority=None, shard: bool = False,
+                             pairing: Optional[str] = None,
+                             selection: Optional[str] = None,
+                             admission: Optional[str] = None,
+                             cell=None,
+                             n_cells: Optional[int] = None
+                             ) -> EngineSchedule:
         gains = jnp.asarray(gains, jnp.float32)
         n_samples = jnp.asarray(n_samples, jnp.float32)
         b, n = gains.shape
@@ -1542,8 +1623,11 @@ class WirelessEngine:
         planner when ``FLConfig.n_cells > 1``.
 
         Returns dict of stacked per-round metrics (t_round (R, S),
-        n_selected (R, S), max_age (R, S)) plus participation (S, N) and,
-        under multi-cell, per-round ``handovers`` (R, S).
+        n_selected (R, S), max_age (R, S)), the diag leaves of the
+        telemetry contract (t_comp_bottleneck / t_up_bottleneck (R, S),
+        n_evicted (R, S) int32, aou_hist (R, S, 7) int32 — DESIGN.md
+        section 11), plus participation (S, N) and, under multi-cell,
+        per-round ``handovers`` (R, S).
         ``shard=True`` splits the independent seeds over all devices.
         """
         gains_seq = jnp.asarray(gains_seq, jnp.float32)
@@ -1647,45 +1731,67 @@ class WirelessEngine:
         cap = 0
         prev_cell = None
         t_rounds, n_sels, max_ages, handovers = [], [], [], []
-        for i in range(rounds):
-            gains, n_samples, cpu_freq, cellv = env_fn(i)
-            if ages is None:
-                s, n = gains.shape
-                multicell = n_cells > 1 and cellv is not None
+        t_comp_bs, t_up_bs, n_evs, aou_hists = [], [], [], []
+        mc_span = trace.span("engine.mc_loop", rounds=rounds, policy=policy)
+        with mc_span as sp:
+            for i in range(rounds):
+                gains, n_samples, cpu_freq, cellv = env_fn(i)
+                if ages is None:
+                    s, n = gains.shape
+                    multicell = n_cells > 1 and cellv is not None
+                    if multicell:
+                        cap = cell_capacity(n, n_cells, self.prm.slots)
+                        n_cand0 = min(self.prm.slots, cap)
+                        admission = resolve_admission(admission, cap,
+                                                      n_cand0)
+                    else:
+                        n_cand0 = min(self.prm.slots, n)
+                        admission = resolve_admission(admission, n, n_cand0)
+                    n_pairs = max((n_cand0 + 1) // 2, 1)
+                    ages = jnp.ones((s, n), jnp.float32)
+                    part = jnp.zeros((s, n), jnp.float32)
+                    sp.note(s=s, n=n, cold=trace.cold(
+                        ("mc", s, n, policy, pairing, selection, admission,
+                         float(t_budget), multicell)))
+                (ages, part, t_round, n_sel, max_age, t_comp_b, t_up_b,
+                 n_ev, aou_h) = _montecarlo_step(
+                    ages, part, gains, keys[i], n_samples, cpu_freq, mb,
+                    jnp.asarray(i, jnp.int32),
+                    cellv if multicell else None,
+                    prm=self.prm, gamma=self.flcfg.age_exponent,
+                    policy=policy,
+                    t_budget=float(t_budget), n_pairs=n_pairs,
+                    n_cand0=n_cand0,
+                    pairing=pairing, selection=selection,
+                    admission=admission,
+                    pallas_impl=self.pallas_impl if self.use_pallas
+                    else None,
+                    n_cells=n_cells if multicell else 1, cap=cap)
+                t_rounds.append(t_round)
+                n_sels.append(n_sel)
+                max_ages.append(max_age)
+                t_comp_bs.append(t_comp_b)
+                t_up_bs.append(t_up_b)
+                n_evs.append(n_ev)
+                aou_hists.append(aou_h)
                 if multicell:
-                    cap = cell_capacity(n, n_cells, self.prm.slots)
-                    n_cand0 = min(self.prm.slots, cap)
-                    admission = resolve_admission(admission, cap, n_cand0)
-                else:
-                    n_cand0 = min(self.prm.slots, n)
-                    admission = resolve_admission(admission, n, n_cand0)
-                n_pairs = max((n_cand0 + 1) // 2, 1)
-                ages = jnp.ones((s, n), jnp.float32)
-                part = jnp.zeros((s, n), jnp.float32)
-            ages, part, t_round, n_sel, max_age = _montecarlo_step(
-                ages, part, gains, keys[i], n_samples, cpu_freq, mb,
-                jnp.asarray(i, jnp.int32),
-                cellv if multicell else None,
-                prm=self.prm, gamma=self.flcfg.age_exponent, policy=policy,
-                t_budget=float(t_budget), n_pairs=n_pairs, n_cand0=n_cand0,
-                pairing=pairing, selection=selection, admission=admission,
-                pallas_impl=self.pallas_impl if self.use_pallas else None,
-                n_cells=n_cells if multicell else 1, cap=cap)
-            t_rounds.append(t_round)
-            n_sels.append(n_sel)
-            max_ages.append(max_age)
+                    handovers.append(
+                        jnp.zeros(gains.shape[0], jnp.int32)
+                        if prev_cell is None
+                        else jnp.sum((cellv != prev_cell).astype(jnp.int32),
+                                     axis=1))
+                    prev_cell = cellv
+            out = {"t_round": jnp.stack(t_rounds),
+                   "n_selected": jnp.stack(n_sels),
+                   "max_age": jnp.stack(max_ages), "participation": part,
+                   "final_ages": ages,
+                   "t_comp_bottleneck": jnp.stack(t_comp_bs),
+                   "t_up_bottleneck": jnp.stack(t_up_bs),
+                   "n_evicted": jnp.stack(n_evs),
+                   "aou_hist": jnp.stack(aou_hists)}
             if multicell:
-                handovers.append(
-                    jnp.zeros(gains.shape[0], jnp.int32) if prev_cell is None
-                    else jnp.sum((cellv != prev_cell).astype(jnp.int32),
-                                 axis=1))
-                prev_cell = cellv
-        out = {"t_round": jnp.stack(t_rounds),
-               "n_selected": jnp.stack(n_sels),
-               "max_age": jnp.stack(max_ages), "participation": part,
-               "final_ages": ages}
-        if multicell:
-            out["handovers"] = jnp.stack(handovers)
+                out["handovers"] = jnp.stack(handovers)
+            sp.fence(out["t_round"])
         return out
 
 
@@ -1755,8 +1861,10 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
         sched = _rescore_pallas(sched, gains, mb, oma, prm, pallas_impl)
     sel = sched.selected
     ages2 = jnp.where(sel, 1.0, ages + 1.0)
+    diag = schedule_diag(sched, ages2)
     return (ages2, part + sel, sched.t_round, jnp.sum(sel, axis=1),
-            jnp.max(ages2, axis=1))
+            jnp.max(ages2, axis=1), diag["t_comp_bottleneck"],
+            diag["t_up_bottleneck"], diag["n_evicted"], diag["aou_hist"])
 
 
 def engine_schedule_to_numpy(out: EngineSchedule, b: int,

@@ -56,6 +56,8 @@ import numpy as np
 
 from repro.configs.base import ADMISSIONS, FLConfig, NOMAConfig
 from repro.core import aoi, noma, pairing, roundtime
+from repro.obs import trace
+from repro.obs.metrics import aou_histogram
 
 SELECTIONS = ("greedy_set", "joint")
 
@@ -124,6 +126,58 @@ def age_score(env: RoundEnv, flcfg: FLConfig) -> np.ndarray:
     ``engine._age_priority``)."""
     w = env.n_samples / env.n_samples.sum()
     return aoi.age_priority(env.ages, w, flcfg.age_exponent)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics (engine twin: ``engine.schedule_diag``)
+# ---------------------------------------------------------------------------
+
+
+def schedule_diag(sched: Schedule, ages: Optional[np.ndarray] = None, *,
+                  cell: Optional[np.ndarray] = None,
+                  n_cells: int = 1) -> dict:
+    """Fixed-shape per-round diagnostics of a ``Schedule`` — the numpy
+    reference of the telemetry contract (DESIGN.md section 11; jax twin:
+    ``engine.schedule_diag``, parity-tested leaf-for-leaf).
+
+    The bottleneck decomposition is exact by construction: the round time
+    is the max over selected clients of t_cmp + t_com, so the argmax
+    client's ``t_comp_bottleneck + t_up_bottleneck == t_round`` to fp
+    precision (single- and multi-cell alike — cells transmit in parallel
+    and the global round time is the slowest cell's bottleneck client).
+    ``n_evicted`` equals the budget-loop iteration count (each iteration
+    evicts exactly one client). ``aou_hist`` buckets the FULL population's
+    ages on ``metrics.AOU_BUCKET_EDGES`` when ``ages`` is given;
+    ``sel_per_cell`` counts selected clients per cell when a cell map is
+    given.
+    """
+    sel = np.asarray(sched.selected, dtype=bool)
+    tot = np.where(sel, sched.t_cmp + sched.t_com, 0.0)
+    b = int(np.argmax(tot))
+    any_sel = bool(sel.any())
+    info = sched.info or {}
+    if "evicted" in info:
+        n_evicted = len(info["evicted"])
+        n_swaps = info.get("joint_swaps_accepted", 0)
+    else:
+        cells = info.get("cells", ())
+        n_evicted = sum(len(c.get("evicted", ())) for c in cells)
+        n_swaps = sum(c.get("joint_swaps_accepted", 0) for c in cells)
+    diag = {
+        "t_round": float(sched.t_round),
+        "t_comp_bottleneck": float(sched.t_cmp[b]) if any_sel else 0.0,
+        "t_up_bottleneck": float(sched.t_com[b]) if any_sel else 0.0,
+        "n_selected": int(sel.sum()),
+        "n_evicted": int(n_evicted),
+        "joint_swaps_accepted": int(n_swaps),
+    }
+    if ages is not None:
+        diag["aou_hist"] = aou_histogram(ages)
+    if cell is not None and n_cells > 1:
+        diag["sel_per_cell"] = np.bincount(
+            np.asarray(cell, dtype=int)[sel], minlength=n_cells
+        ).astype(np.int64)
+    return diag
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +265,8 @@ def sw_completion(cand, env: RoundEnv, t_cmp: np.ndarray, ncfg: NOMAConfig,
 
 def joint_admission(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
                     *, oma: bool = False,
-                    pairing_policy: Optional[str] = None) -> list:
+                    pairing_policy: Optional[str] = None,
+                    diag: Optional[dict] = None) -> list:
     """Pairing-aware refinement of the greedy admitted set ``cand``:
 
     * ``n <= JOINT_ENUM_MAX_N``: enumerate every C(n, c) candidate set and
@@ -224,7 +279,15 @@ def joint_admission(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
     * never-worse guard: the refined set replaces ``cand`` only when its
       REALIZED round time under the active pairing policy strictly beats
       the greedy set's.
+
+    ``diag`` (optional dict) collects refinement telemetry in place:
+    ``joint_swaps_accepted`` (accepted local-search swaps) and
+    ``joint_kept`` (did the guard keep the refined set).
     """
+    if diag is None:
+        diag = {}
+    diag.setdefault("joint_swaps_accepted", 0)
+    diag.setdefault("joint_kept", False)
     flcfg = (flcfg if pairing_policy is None
              else dataclasses.replace(flcfg, pairing=pairing_policy))
     n = len(env.gains)
@@ -240,16 +303,17 @@ def joint_admission(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig,
                  for s in subsets]
         refined = [int(x) for x in subsets[int(np.argmin(times))]]
     else:
-        refined = _swap_search(cand, env, t_cmp, ncfg, oma=oma)
+        refined = _swap_search(cand, env, t_cmp, ncfg, oma=oma, diag=diag)
     if set(refined) == set(cand):
         return list(cand)
     t_greedy = finalize(cand, env, ncfg, flcfg, oma, {}).t_round
     t_joint = finalize(refined, env, ncfg, flcfg, oma, {}).t_round
+    diag["joint_kept"] = bool(t_joint < t_greedy)
     return refined if t_joint < t_greedy else list(cand)
 
 
 def _swap_search(cand, env: RoundEnv, t_cmp: np.ndarray, ncfg: NOMAConfig,
-                 *, oma: bool = False) -> list:
+                 *, oma: bool = False, diag: Optional[dict] = None) -> list:
     """Swap/prune local search (see ``joint_admission``). The solo
     completion proxy prunes the swap-in choice to one candidate per
     iteration; acceptance is exact on the strong_weak completion."""
@@ -268,6 +332,8 @@ def _swap_search(cand, env: RoundEnv, t_cmp: np.ndarray, ncfg: NOMAConfig,
                                                    oma=oma)
         if not new_t < cur_t:
             break
+        if diag is not None:
+            diag["joint_swaps_accepted"] += 1
         cur, cur_t, comp, order = new, new_t, new_comp, new_order
     return cur
 
@@ -370,29 +436,37 @@ def plan_round(env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig, *,
     t_budget = flcfg.t_budget_s if t_budget is None else t_budget
     n = len(env.gains)
     slots = ncfg.n_subchannels * ncfg.users_per_subchannel
-    order = admission_order(priority, env.gains)
-    cand = [int(x) for x in order[:min(slots, n)]]
-    if selection == "joint":
-        cand = joint_admission(cand, env, ncfg, flcfg, oma=oma)
+    with trace.span("plan.admit", n=n, slots=slots):
+        order = admission_order(priority, env.gains)
+        cand = [int(x) for x in order[:min(slots, n)]]
     base = dict(info or {})
+    if selection == "joint":
+        with trace.span("plan.joint", n=n) as sp:
+            cand = joint_admission(cand, env, ncfg, flcfg, oma=oma,
+                                   diag=base)
+            sp.note(swaps=base["joint_swaps_accepted"],
+                    kept=base["joint_kept"])
     base["selection"] = selection
 
     evicted: list = []
     while True:
-        sched = finalize(cand, env, ncfg, flcfg, oma,
-                         {**base, "evicted": list(evicted)})
+        with trace.span("plan.finalize", n=n):
+            sched = finalize(cand, env, ncfg, flcfg, oma,
+                             {**base, "evicted": list(evicted)})
         if t_budget <= 0 or sched.t_round <= t_budget or len(cand) <= 1:
             return sched
         # evict the latency-critical client, backfill the next
         # never-admitted client in priority order
-        tot = (sched.t_cmp + sched.t_com) * sched.selected
-        worst = int(np.argmax(tot))
-        cand.remove(worst)
-        evicted.append(worst)
-        for nxt in order[slots:]:
-            if nxt not in cand and nxt not in evicted and len(cand) < slots:
-                cand.append(int(nxt))
-                break
+        with trace.span("plan.evict", n=n):
+            tot = (sched.t_cmp + sched.t_com) * sched.selected
+            worst = int(np.argmax(tot))
+            cand.remove(worst)
+            evicted.append(worst)
+            for nxt in order[slots:]:
+                if (nxt not in cand and nxt not in evicted
+                        and len(cand) < slots):
+                    cand.append(int(nxt))
+                    break
 
 
 def plan_fixed(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig, *,
@@ -406,10 +480,14 @@ def plan_fixed(cand, env: RoundEnv, ncfg: NOMAConfig, flcfg: FLConfig, *,
         raise ValueError(f"unknown selection mode {selection!r} "
                          f"(expected one of {SELECTIONS})")
     cand = [int(x) for x in cand]
+    base = dict(info or {})
     if selection == "joint":
-        cand = joint_admission(cand, env, ncfg, flcfg, oma=oma)
-    return finalize(cand, env, ncfg, flcfg, oma,
-                    {**dict(info or {}), "selection": selection})
+        with trace.span("plan.joint", n=len(env.gains)):
+            cand = joint_admission(cand, env, ncfg, flcfg, oma=oma,
+                                   diag=base)
+    base["selection"] = selection
+    with trace.span("plan.finalize", n=len(env.gains)):
+        return finalize(cand, env, ncfg, flcfg, oma, base)
 
 
 # ---------------------------------------------------------------------------
@@ -472,29 +550,35 @@ def plan_multicell(env: RoundEnv, cell: np.ndarray, n_cells: int,
     pairs: list = []
     t_round = 0.0
     cells_info = []
-    for c in range(n_cells):
-        members = np.flatnonzero(cell == c)[:cap]
-        if members.size == 0:
-            cells_info.append({"cell": c, "n_members": 0, "t_round": 0.0})
-            continue
-        sub_env = RoundEnv(gains=env.gains[members],
-                           n_samples=env.n_samples[members],
-                           cpu_freq=env.cpu_freq[members],
-                           ages=env.ages[members],
-                           model_bits=env.model_bits)
-        sub = plan_round(sub_env, ncfg, flcfg, priority=priority[members],
-                         oma=oma, t_budget=t_budget, selection=selection)
-        selected[members] = sub.selected
-        rates[members] = sub.rates
-        powers[members] = sub.powers
-        pairs += [(int(members[i]), int(members[j]) if j >= 0 else -1)
-                  for (i, j) in sub.pairs]
-        t_round = max(t_round, sub.t_round)
-        cells_info.append({
-            "cell": c, "n_members": int(members.size),
-            "t_round": sub.t_round,
-            "evicted": [int(members[e])
-                        for e in sub.info.get("evicted", [])]})
+    with trace.span("plan.multicell", n=n, n_cells=n_cells):
+        for c in range(n_cells):
+            members = np.flatnonzero(cell == c)[:cap]
+            if members.size == 0:
+                cells_info.append({"cell": c, "n_members": 0,
+                                   "t_round": 0.0})
+                continue
+            sub_env = RoundEnv(gains=env.gains[members],
+                               n_samples=env.n_samples[members],
+                               cpu_freq=env.cpu_freq[members],
+                               ages=env.ages[members],
+                               model_bits=env.model_bits)
+            sub = plan_round(sub_env, ncfg, flcfg,
+                             priority=priority[members],
+                             oma=oma, t_budget=t_budget,
+                             selection=selection)
+            selected[members] = sub.selected
+            rates[members] = sub.rates
+            powers[members] = sub.powers
+            pairs += [(int(members[i]), int(members[j]) if j >= 0 else -1)
+                      for (i, j) in sub.pairs]
+            t_round = max(t_round, sub.t_round)
+            cells_info.append({
+                "cell": c, "n_members": int(members.size),
+                "t_round": sub.t_round,
+                "joint_swaps_accepted":
+                    sub.info.get("joint_swaps_accepted", 0),
+                "evicted": [int(members[e])
+                            for e in sub.info.get("evicted", [])]})
     t_com = roundtime.comm_times(env.model_bits, rates)
     w = env.n_samples.astype(np.float64) * selected
     w = w / max(w.sum(), 1e-12)

@@ -12,6 +12,7 @@ import numpy as np
 from repro.configs.base import FLConfig, ModelConfig, NOMAConfig
 from repro.data import TaskConfig
 from repro.fl.server import FLServer, History
+from repro.obs import RunLedger
 
 POLICIES = ("age_noma", "age_noma_budget", "random", "channel",
             "round_robin", "oma_age")
@@ -95,8 +96,15 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
     With ``FLConfig.n_cells > 1`` the scenario's per-client cell
     association is threaded through to the cell-partitioned planner
     (each cell schedules its own K subchannels; global round time = max
-    over cells) and the summary gains ``handover_rate`` — the mean
-    fraction of clients whose serving BS changed per round.
+    over cells) and ``handover_rate`` is the mean fraction of clients
+    whose serving BS changed per round. Every summary carries the same
+    key set regardless of policy or cell count — ``handover_rate`` /
+    ``t_budget_s`` are None when inapplicable — so cross-policy and
+    cross-config summary diffs never KeyError.
+
+    The whole sweep is recorded to a JSONL run ledger under
+    ``experiments/runs/`` (one ``policy_done`` event per policy with its
+    summary; ``REPRO_LEDGER=0`` disables).
     """
     import jax
     import jax.numpy as jnp
@@ -138,39 +146,59 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
         "pairing": eng.pairing, "selection": eng.selection,
         "admission": eng.admission,
         "n_cells": flcfg.n_cells, "cell_layout": flcfg.cell_layout}}
-    for policy in policies:
-        tb = t_budget
-        if policy == "age_noma_budget" and tb <= 0.0:
-            tb = auto_budget
-        if envs is not None:
-            out = eng.montecarlo_rounds(
-                np.asarray(envs.gains), np.asarray(envs.n_samples),
-                np.asarray(envs.cpu_freq), model_bits, policy=policy,
-                t_budget=tb, seed=seed, shard=shard,
-                cell_seq=np.asarray(envs.cell) if multicell else None)
-        else:
-            out = eng.montecarlo_scenario(
-                scn, rounds=r, n_seeds=s, n_clients=n,
-                model_bits=model_bits, policy=policy, t_budget=tb,
-                seed=seed, key=k_env, shard=shard)
-        t_round = np.asarray(out["t_round"])          # (R, S)
-        part = np.asarray(out["participation"])       # (S, N)
-        jain = (part.sum(1) ** 2
-                / np.maximum(n * (part ** 2).sum(1), 1e-12))  # (S,)
-        results[policy] = {k: np.asarray(v) for k, v in out.items()}
-        results["summary"][policy] = {
-            "mean_t_round_s": float(t_round.mean()),
-            "total_time_s": float(t_round.sum(0).mean()),
-            "max_age": int(np.asarray(out["max_age"]).max()),
-            "mean_max_age": float(np.asarray(out["max_age"]).mean()),
-            "jain_participation": float(jain.mean()),
-        }
-        if "handovers" in out:
-            # mean fraction of clients switching serving BS per round
-            results["summary"][policy]["handover_rate"] = float(
-                np.asarray(out["handovers"]).mean() / n)
-        if policy == "age_noma_budget":
-            results["summary"][policy]["t_budget_s"] = float(tb)
+    ledger = RunLedger.open("montecarlo", {
+        **results["meta"], "policies": list(policies), "seed": seed})
+    try:
+        for policy in policies:
+            tb = t_budget
+            if policy == "age_noma_budget" and tb <= 0.0:
+                tb = auto_budget
+            if envs is not None:
+                out = eng.montecarlo_rounds(
+                    np.asarray(envs.gains), np.asarray(envs.n_samples),
+                    np.asarray(envs.cpu_freq), model_bits, policy=policy,
+                    t_budget=tb, seed=seed, shard=shard,
+                    cell_seq=np.asarray(envs.cell) if multicell else None)
+            else:
+                out = eng.montecarlo_scenario(
+                    scn, rounds=r, n_seeds=s, n_clients=n,
+                    model_bits=model_bits, policy=policy, t_budget=tb,
+                    seed=seed, key=k_env, shard=shard)
+            t_round = np.asarray(out["t_round"])          # (R, S)
+            part = np.asarray(out["participation"])       # (S, N)
+            jain = (part.sum(1) ** 2
+                    / np.maximum(n * (part ** 2).sum(1), 1e-12))  # (S,)
+            results[policy] = {k: np.asarray(v) for k, v in out.items()}
+            # every policy emits the SAME summary key set (None when
+            # inapplicable) so cross-policy/config diffs never KeyError
+            results["summary"][policy] = {
+                "mean_t_round_s": float(t_round.mean()),
+                "total_time_s": float(t_round.sum(0).mean()),
+                "max_age": int(np.asarray(out["max_age"]).max()),
+                "mean_max_age": float(np.asarray(out["max_age"]).mean()),
+                "jain_participation": float(jain.mean()),
+                # round-time decomposition of the bottleneck pair
+                # (means sum to mean_t_round_s within fp32 tolerance)
+                "mean_t_comp_bottleneck_s": float(
+                    np.asarray(out["t_comp_bottleneck"]).mean()),
+                "mean_t_up_bottleneck_s": float(
+                    np.asarray(out["t_up_bottleneck"]).mean()),
+                "mean_n_evicted": float(
+                    np.asarray(out["n_evicted"]).mean()),
+                # population AoU histogram summed over rounds x seeds
+                # ((7,) counts on metrics.AOU_BUCKET_EDGES)
+                "aou_hist": np.asarray(out["aou_hist"])
+                .sum(axis=(0, 1)).tolist(),
+                "handover_rate": (
+                    float(np.asarray(out["handovers"]).mean() / n)
+                    if "handovers" in out else None),
+                "t_budget_s": (float(tb) if policy == "age_noma_budget"
+                               else None),
+            }
+            ledger.event("policy_done", policy=policy,
+                         summary=results["summary"][policy])
+    finally:
+        ledger.close()
     return results
 
 

@@ -48,6 +48,7 @@ from repro.fl.aggregate import aggregate_deltas, apply_aggregate, \
 from repro.fl.client import LocalTrainer
 from repro.fl.predictor import UpdatePredictor
 from repro.models import zoo
+from repro.obs import RunLedger, json_safe, trace
 from repro.sim import NumpyScenario, get_scenario_config
 
 
@@ -65,21 +66,28 @@ class History:
     n_predicted: list = dataclasses.field(default_factory=list)
     pred_loss: list = dataclasses.field(default_factory=list)
     pred_error: list = dataclasses.field(default_factory=list)
+    # round-time decomposition + planner diagnostics (the telemetry
+    # contract, DESIGN.md section 11): the bottleneck client's
+    # t_comp/t_up split (sums to round_time), budget-loop eviction
+    # counts, joint-swap acceptances, and the population AoU histogram
+    # ((7,) list per round on metrics.AOU_BUCKET_EDGES)
+    t_comp_bottleneck: list = dataclasses.field(default_factory=list)
+    t_up_bottleneck: list = dataclasses.field(default_factory=list)
+    n_evicted: list = dataclasses.field(default_factory=list)
+    joint_swaps: list = dataclasses.field(default_factory=list)
+    aou_hist: list = dataclasses.field(default_factory=list)
+    # per-cell selection + handover counts (empty lists when n_cells == 1)
+    sel_per_cell: list = dataclasses.field(default_factory=list)
+    handovers: list = dataclasses.field(default_factory=list)
     participation: Optional[np.ndarray] = None
 
     def as_dict(self):
-        """JSON-safe dict: ndarrays become lists, non-finite floats become
-        None (predictor telemetry is NaN on rounds without predictions, and
-        bare NaN tokens break strict JSON parsers)."""
-        def clean(v):
-            if isinstance(v, np.ndarray):
-                return v.tolist()
-            if isinstance(v, list):
-                return [None if isinstance(x, float) and not np.isfinite(x)
-                        else x for x in v]
-            return v
-
-        return {k: clean(v) for k, v in dataclasses.asdict(self).items()}
+        """JSON-safe dict via ``obs.json_safe``: ndarray leaves become
+        (nested) lists, non-finite floats become None (predictor telemetry
+        is NaN on rounds without predictions, and bare NaN tokens break
+        strict JSON parsers)."""
+        return {k: json_safe(v)
+                for k, v in dataclasses.asdict(self).items()}
 
 
 class FLServer:
@@ -356,30 +364,79 @@ class FLServer:
         self.pred_stats = {"n_predicted": len(targets), **stats}
 
     # -- full experiment ---------------------------------------------------
-    def run(self, rounds: Optional[int] = None, *, verbose: bool = False
-            ) -> History:
+    def run(self, rounds: Optional[int] = None, *, verbose: bool = False,
+            ledger: Optional[RunLedger] = None) -> History:
+        """Run ``rounds`` FL rounds -> ``History``. Each round's planner
+        diagnostics (``plan.schedule_diag``) are folded into the history;
+        the whole run is recorded to a JSONL run ledger under
+        ``experiments/runs/`` (pass ``ledger`` to reuse an open one;
+        ``REPRO_LEDGER=0`` disables)."""
         rounds = rounds or self.fl.rounds
         hist = History()
         part = np.zeros(self.fl.n_clients)
-        for r in range(rounds):
-            sched = self.run_round()
-            part += sched.selected
-            if r % self.eval_every == 0 or r == rounds - 1:
-                acc, loss = self.evaluate()
-            hist.rounds.append(r)
-            hist.sim_time.append(self.t_sim)
-            hist.round_time.append(sched.t_round)
-            hist.accuracy.append(acc)
-            hist.loss.append(loss)
-            hist.max_age.append(aoi.max_age(self.ages))
-            hist.mean_age.append(aoi.mean_age(self.ages))
-            hist.n_selected.append(int(sched.selected.sum()))
-            hist.n_predicted.append(self.pred_stats["n_predicted"])
-            hist.pred_loss.append(self.pred_stats["pred_loss"])
-            hist.pred_error.append(self.pred_stats["pred_error"])
-            if verbose and r % self.eval_every == 0:
-                print(f"[{self.policy}] round {r:3d} t={self.t_sim:9.1f}s "
-                      f"acc={acc:.4f} loss={loss:.4f} "
-                      f"max_age={hist.max_age[-1]}")
-        hist.participation = part
+        own_ledger = ledger is None
+        if own_ledger:
+            ledger = RunLedger.open("fl_run", {
+                "policy": self.policy, "rounds": rounds,
+                "engine": self.engine_mode, "scenario": self.scenario_name,
+                "predictor": self.predictor_mode,
+                "fl": dataclasses.asdict(self.fl),
+                "noma": dataclasses.asdict(self.noma),
+                "model": dataclasses.asdict(self.cfg)})
+        multicell = self.fl.n_cells > 1
+        prev_cell = np.asarray(self.scenario.cell).copy() if multicell \
+            else None
+        try:
+            for r in range(rounds):
+                with trace.span("server.round", r=r):
+                    sched = self.run_round()
+                part += sched.selected
+                if r % self.eval_every == 0 or r == rounds - 1:
+                    acc, loss = self.evaluate()
+                cellv = (np.asarray(self.scenario.cell) if multicell
+                         else None)
+                diag = plan.schedule_diag(
+                    sched, self.ages, cell=cellv,
+                    n_cells=self.fl.n_cells)
+                hist.rounds.append(r)
+                hist.sim_time.append(self.t_sim)
+                hist.round_time.append(sched.t_round)
+                hist.accuracy.append(acc)
+                hist.loss.append(loss)
+                hist.max_age.append(aoi.max_age(self.ages))
+                hist.mean_age.append(aoi.mean_age(self.ages))
+                hist.n_selected.append(int(sched.selected.sum()))
+                hist.n_predicted.append(self.pred_stats["n_predicted"])
+                hist.pred_loss.append(self.pred_stats["pred_loss"])
+                hist.pred_error.append(self.pred_stats["pred_error"])
+                hist.t_comp_bottleneck.append(diag["t_comp_bottleneck"])
+                hist.t_up_bottleneck.append(diag["t_up_bottleneck"])
+                hist.n_evicted.append(diag["n_evicted"])
+                hist.joint_swaps.append(diag["joint_swaps_accepted"])
+                hist.aou_hist.append(diag["aou_hist"].tolist())
+                if multicell:
+                    hist.sel_per_cell.append(
+                        diag["sel_per_cell"].tolist())
+                    hist.handovers.append(
+                        int(np.sum(cellv != prev_cell)))
+                    prev_cell = cellv.copy()
+                ledger.event(
+                    "round", r=r, t_round=sched.t_round,
+                    sim_time=self.t_sim, accuracy=acc, loss=loss,
+                    n_selected=hist.n_selected[-1],
+                    max_age=hist.max_age[-1],
+                    t_comp_bottleneck=diag["t_comp_bottleneck"],
+                    t_up_bottleneck=diag["t_up_bottleneck"],
+                    n_evicted=diag["n_evicted"],
+                    n_predicted=self.pred_stats["n_predicted"])
+                if verbose and r % self.eval_every == 0:
+                    print(f"[{self.policy}] round {r:3d} "
+                          f"t={self.t_sim:9.1f}s "
+                          f"acc={acc:.4f} loss={loss:.4f} "
+                          f"max_age={hist.max_age[-1]}")
+            hist.participation = part
+            ledger.event("history", **hist.as_dict())
+        finally:
+            if own_ledger:
+                ledger.close()
         return hist

@@ -8,6 +8,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """
 
 import argparse
+import contextlib
 import json
 
 from repro.launch.dryrun import dryrun_one
@@ -52,12 +53,25 @@ PAIRS = {
 }
 
 
-def run_pair(name: str, out_dir: str = "experiments/perf"):
+def run_pair(name: str, out_dir: str = "experiments/perf", *,
+             profile_dir: str = None):
+    """Run one hillclimb pair. ``profile_dir`` wraps the variant sweep in
+    the opt-in ``jax.profiler.trace`` hook (``obs.trace.profile``) and each
+    variant compile in a host span — inspect with ``tensorboard --logdir``
+    and ``trace.format_report``."""
+    from repro.obs import trace
+
     spec = PAIRS[name]
     rows = []
-    for variant in spec["variants"]:
-        rec = dryrun_one(spec["arch"], spec["shape"], variant=variant)
-        rows.append(rec)
+    prof = (trace.profile(profile_dir) if profile_dir
+            else contextlib.nullcontext())
+    with prof:
+        for variant in spec["variants"]:
+            with trace.span("perf.variant", pair=name,
+                            note=variant.get("note", "")):
+                rec = dryrun_one(spec["arch"], spec["shape"],
+                                 variant=variant)
+            rows.append(rec)
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
         json.dump(rows, f, indent=1)
@@ -74,8 +88,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", required=True, choices=list(PAIRS))
     ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="dump a jax.profiler trace of the sweep to DIR "
+                         "(view with tensorboard --logdir DIR)")
     args = ap.parse_args()
-    run_pair(args.pair, args.out)
+    run_pair(args.pair, args.out, profile_dir=args.profile)
 
 
 if __name__ == "__main__":

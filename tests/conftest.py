@@ -4,6 +4,11 @@ import os
 # ONLY inside repro.launch.dryrun (and the dedicated dryrun test subprocess).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# the JSONL run ledger (repro.obs.ledger) defaults ON for real driver runs;
+# the suite must not spray run directories — obs tests opt back in with
+# explicit enabled=True/root=tmp_path.
+os.environ.setdefault("REPRO_LEDGER", "0")
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

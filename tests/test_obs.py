@@ -1,0 +1,305 @@
+"""Observability layer (src/repro/obs/): tracer spans, metrics, JSONL run
+ledger, engine/planner round diagnostics parity, and the bench-regression
+gate. The telemetry CONTRACT lives in DESIGN.md section 11 — these tests
+pin it."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, NOMAConfig
+from repro.core import RoundEnv, aoi, noma, plan
+from repro.core.engine import WirelessEngine
+from repro.core.engine import schedule_diag as engine_schedule_diag
+from repro.fl.server import History
+from repro.obs import (
+    AOU_BUCKET_EDGES,
+    MetricsRegistry,
+    RunLedger,
+    aou_histogram,
+    json_safe,
+    trace,
+)
+from repro.obs.ledger import EVENT_KEYS, MANIFEST_KEYS
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------- tracer
+
+def test_span_nesting_and_parent():
+    with trace.tracing() as tr:
+        with trace.span("outer"):
+            with trace.span("inner", k=1):
+                pass
+        with trace.span("outer2"):
+            pass
+    names = [s.name for s in tr.spans]
+    assert names == ["inner", "outer", "outer2"]  # post-order append
+    by = {s.name: s for s in tr.spans}
+    assert by["inner"].parent == "outer" and by["inner"].depth == 1
+    assert by["outer"].parent is None and by["outer"].depth == 0
+    assert by["inner"].meta == {"k": 1}
+    assert all(s.duration_s >= 0 for s in tr.spans)
+
+
+def test_span_disabled_is_noop():
+    # outside a tracing() block the global tracer is disabled: spans
+    # record nothing and cold() always says False
+    before = list(trace.get_tracer().spans)
+    with trace.span("nope") as h:
+        h.note(x=1)
+        h.fence(np.zeros(3))
+    assert list(trace.get_tracer().spans) == before
+    assert trace.cold(("some", "key")) is False
+
+
+def test_cold_fires_once_per_key():
+    with trace.tracing() as tr:
+        assert trace.cold(("sig", 1)) is True
+        assert trace.cold(("sig", 1)) is False
+        assert trace.cold(("sig", 2)) is True
+        with trace.span("s", cold=trace.cold(("sig", 1))):
+            pass
+    assert tr.spans[0].cold is False
+
+
+def test_span_note_late_cold_override():
+    with trace.tracing() as tr:
+        with trace.span("s", cold=False) as h:
+            h.note(cold=True, extra=7)
+    s = tr.spans[0]
+    assert s.cold is True
+    assert s.meta == {"extra": 7}  # cold consumed, not left in meta
+
+
+def test_summarize_and_report():
+    with trace.tracing() as tr:
+        for i in range(3):
+            with trace.span("work", cold=(i == 0)):
+                pass
+    summ = trace.summarize(tr.spans)
+    row = next(r for r in summ if r["name"] == "work")
+    assert row["count"] == 3 and row["cold_count"] == 1
+    assert row["total_s"] == pytest.approx(
+        row["cold_s"] + row["warm_s"], rel=1e-9)
+    assert "work" in trace.format_report(summ)
+
+
+# --------------------------------------------------------------- metrics
+
+def test_aou_histogram_buckets():
+    ages = np.array([0., 1., 1.5, 2., 3., 9., 100.])
+    h = aou_histogram(ages)
+    assert h.shape == (len(AOU_BUCKET_EDGES) + 1,)
+    assert int(h.sum()) == len(ages)
+    # (edge[i-1], edge[i]] convention: age 1.0 lands in bucket 0, 1.5 and
+    # 2.0 in bucket 1, 9 in (8, 16], 100 overflows into the last bucket
+    assert h.tolist() == [2, 2, 1, 0, 1, 0, 1]
+
+
+def test_metrics_registry():
+    m = MetricsRegistry()
+    m.counter("rounds").inc()
+    m.counter("rounds").inc(2)
+    m.gauge("t").set(1.5)
+    m.histogram("age", edges=(1., 2.)).observe(1.5)
+    d = m.as_dict()
+    assert d["rounds"]["value"] == 3
+    assert d["t"]["value"] == 1.5
+    assert sum(d["age"]["counts"]) == 1
+    with pytest.raises(ValueError):
+        m.gauge("rounds")  # type mismatch on re-registration
+
+
+def test_json_safe_round_trips_through_json():
+    v = json_safe({"a": np.arange(3), "b": np.float32(1.5),
+                   "c": float("nan"), "d": (1, np.int64(2))})
+    s = json.dumps(v, allow_nan=False)
+    assert json.loads(s) == {"a": [0, 1, 2], "b": 1.5, "c": None,
+                             "d": [1, 2]}
+
+
+# ------------------------------------------------------- history + ledger
+
+def test_history_as_dict_json_round_trip():
+    h = History()
+    h.accuracy.append(float("nan"))
+    h.round_time.append(1.25)
+    h.participation = np.array([1.0, 0.0, 2.0])
+    d = h.as_dict()
+    restored = json.loads(json.dumps(d, allow_nan=False))
+    assert restored["accuracy"] == [None]
+    assert restored["round_time"] == [1.25]
+    assert restored["participation"] == [1.0, 0.0, 2.0]
+    assert set(d) == {f.name for f in
+                      __import__("dataclasses").fields(History)}
+
+
+def test_ledger_schema(tmp_path):
+    with RunLedger.open("unit_test", {"n": 3}, root=str(tmp_path),
+                        enabled=True) as led:
+        led.event("round", r=0, t_round=1.5, arr=np.arange(2))
+    run_dir = led.run_dir
+    assert run_dir is not None
+    man = json.load(open(os.path.join(run_dir, "manifest.json")))
+    for k in MANIFEST_KEYS:
+        assert k in man, k
+    assert man["kind"] == "unit_test" and man["config"] == {"n": 3}
+    lines = [json.loads(ln) for ln in
+             open(os.path.join(run_dir, "events.jsonl"))]
+    events = [ln["event"] for ln in lines]
+    assert events == ["run_start", "round", "run_end"]
+    for ln in lines:
+        for k in EVENT_KEYS:
+            assert k in ln, k
+    assert lines[1]["arr"] == [0, 1]
+
+
+def test_ledger_disabled_null(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_LEDGER", "0")
+    led = RunLedger.open("unit_test", root=str(tmp_path))
+    led.event("x")
+    led.close()
+    assert led.run_dir is None
+    assert list(tmp_path.iterdir()) == []
+
+
+# -------------------------------------------------- round diag parity
+
+def _env_batch(rng, b, n, ncfg):
+    d = np.stack([noma.sample_distances(rng, n, ncfg) for _ in range(b)])
+    gains = np.stack([noma.sample_gains(rng, d[i], ncfg)
+                      for i in range(b)])
+    ns = rng.integers(100, 1000, (b, n)).astype(float)
+    cpu = rng.uniform(0.5e9, 2e9, (b, n))
+    ages = np.stack([aoi.init_ages(n) for _ in range(b)]) + \
+        rng.integers(0, 6, (b, n)).astype(float)
+    return gains, ns, cpu, ages
+
+
+def test_schedule_diag_numpy_jax_parity():
+    rng = np.random.default_rng(3)
+    ncfg, fl = NOMAConfig(), FLConfig()
+    b, n = 3, 24
+    gains, ns, cpu, ages = _env_batch(rng, b, n, ncfg)
+    eng = WirelessEngine(ncfg, fl)
+    out = eng.schedule_batch(gains, ns, cpu, ages, fl.model_bits)
+    jd = engine_schedule_diag(out, ages)
+    for i in range(b):
+        env = RoundEnv(gains[i], ns[i], cpu[i], ages[i], fl.model_bits)
+        sched = plan.plan_round(env, ncfg, fl,
+                                priority=plan.age_score(env, fl))
+        nd = plan.schedule_diag(sched, ages[i])
+        assert np.asarray(jd["n_selected"])[i] == nd["n_selected"]
+        assert np.asarray(jd["t_round"])[i] == pytest.approx(
+            nd["t_round"], rel=1e-5)
+        assert np.asarray(jd["t_comp_bottleneck"])[i] == pytest.approx(
+            nd["t_comp_bottleneck"], rel=1e-4, abs=1e-8)
+        assert np.asarray(jd["t_up_bottleneck"])[i] == pytest.approx(
+            nd["t_up_bottleneck"], rel=1e-4, abs=1e-8)
+        np.testing.assert_array_equal(np.asarray(jd["aou_hist"])[i],
+                                      nd["aou_hist"])
+
+
+def test_diag_decomposition_sums_to_t_round():
+    # the headline contract: bottleneck t_comp + t_up == t_round, exactly
+    # in the fp64 numpy planner, to fp32 tolerance in the engine
+    rng = np.random.default_rng(7)
+    ncfg, fl = NOMAConfig(), FLConfig()
+    env = RoundEnv(noma.sample_gains(
+        rng, noma.sample_distances(rng, 20, ncfg), ncfg),
+        rng.integers(100, 1000, 20).astype(float),
+        rng.uniform(0.5e9, 2e9, 20), aoi.init_ages(20), 4e6)
+    d = plan.schedule_diag(plan.plan_round(
+        env, ncfg, fl, priority=plan.age_score(env, fl)))
+    assert d["t_comp_bottleneck"] + d["t_up_bottleneck"] == pytest.approx(
+        d["t_round"], abs=1e-12)
+
+
+def test_planner_spans_and_joint_diag():
+    rng = np.random.default_rng(11)
+    ncfg = NOMAConfig(n_subchannels=4)
+    fl = FLConfig(selection="joint")
+    env = RoundEnv(noma.sample_gains(
+        rng, noma.sample_distances(rng, 16, ncfg), ncfg),
+        rng.integers(100, 1000, 16).astype(float),
+        rng.uniform(0.5e9, 2e9, 16), aoi.init_ages(16), 4e6)
+    with trace.tracing() as tr:
+        sched = plan.plan_round(env, ncfg, fl,
+                                priority=plan.age_score(env, fl))
+    names = {s.name for s in tr.spans}
+    assert {"plan.admit", "plan.joint", "plan.finalize"} <= names
+    assert sched.info["joint_swaps_accepted"] >= 0
+    assert isinstance(sched.info["joint_kept"], bool)
+
+
+def test_mc_loop_diag_keys_and_identity():
+    rng = np.random.default_rng(5)
+    ncfg, fl = NOMAConfig(), FLConfig()
+    r_, s_, n_ = 4, 2, 16
+    d = np.stack([[noma.sample_distances(rng, n_, ncfg)
+                   for _ in range(s_)] for _ in range(r_)])
+    gains_seq = np.stack([[noma.sample_gains(rng, d[r][s], ncfg)
+                           for s in range(s_)] for r in range(r_)])
+    ns = rng.integers(100, 1000, (s_, n_)).astype(float)
+    cpu = rng.uniform(0.5e9, 2e9, (s_, n_))
+    eng = WirelessEngine(ncfg, fl)
+    out = eng.montecarlo_rounds(gains_seq, ns, cpu, 4e6)
+    for k in ("t_comp_bottleneck", "t_up_bottleneck", "n_evicted",
+              "aou_hist"):
+        assert k in out, k
+    assert np.asarray(out["aou_hist"]).shape == \
+        (4, 2, len(AOU_BUCKET_EDGES) + 1)
+    np.testing.assert_allclose(
+        np.asarray(out["t_comp_bottleneck"])
+        + np.asarray(out["t_up_bottleneck"]),
+        np.asarray(out["t_round"]), rtol=1e-5)
+
+
+# ------------------------------------------------------- regression gate
+
+def _regress(fresh_dir, baseline_dir):
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.regress", "--fresh",
+         str(fresh_dir), "--baseline", str(baseline_dir)],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+
+
+def test_regress_gate_fails_on_3x_collapse(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    rows = [{"n": 100, "k": 8, "drops": 64, "drops_per_s_jax": 900.0},
+            {"n": 1000, "k": 8, "drops": 16, "drops_per_s_jax": 300.0}]
+    doc = {"benchmark": "engine_throughput", "backend": "cpu",
+           "smoke": False, "rows": rows}
+    (base / "BENCH_engine_throughput.json").write_text(json.dumps(doc))
+    bad = json.loads(json.dumps(doc))
+    bad["rows"][1]["drops_per_s_jax"] /= 3.0  # 3x collapse on one row
+    bad["rows"][1]["drops"] = 4  # sweep-size knob must not break matching
+    (fresh / "BENCH_engine_throughput.json").write_text(json.dumps(bad))
+    r = _regress(fresh, base)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REGRESSION" in r.stdout and "n=1000" in r.stdout
+
+
+def test_regress_gate_passes_clean_and_reports_unmatched(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    doc = {"rows": [{"n": 100, "drops_per_s": 500.0},
+                    {"n": 9999, "drops_per_s": 100.0}]}
+    (base / "BENCH_x.json").write_text(json.dumps(doc))
+    ok = {"rows": [{"n": 100, "drops_per_s": 480.0},
+                   {"n": 7, "drops_per_s": 1.0}]}  # n=7: no baseline row
+    (fresh / "BENCH_x.json").write_text(json.dumps(ok))
+    (fresh / "BENCH_new.json").write_text(json.dumps({"rows": []}))
+    r = _regress(fresh, base)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no baseline row" in r.stdout
+    assert "BENCH_new.json: NEW" in r.stdout
