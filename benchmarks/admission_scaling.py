@@ -86,7 +86,7 @@ def run(*, smoke=False, out_path=None, seed=0):
         "experiments", "bench", "BENCH_admission_scaling.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(result, f, indent=2, allow_nan=False)
     print(f"{'N':>7} {'K':>5} {'full_sort/s':>12} {'segmented/s':>12} "
           f"{'seg/full':>9}")
     for r in rows:

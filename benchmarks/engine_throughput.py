@@ -199,7 +199,7 @@ def run(*, smoke=False, out_path=None, seed=0):
         "experiments", "bench", "BENCH_engine_throughput.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(result, f, indent=2, allow_nan=False)
     print(f"{'N':>6} {'K':>5} {'numpy/s':>9} {'jax/s':>9} "
           f"{'jax-mc/s':>9} {'pallas/s':>9} {'batch':>7} {'mc sweep':>9}")
     for r in rows:

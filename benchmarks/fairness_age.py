@@ -76,7 +76,7 @@ def run(*, smoke=False, out_path=None, seed=0, rounds=None, n_clients=30):
                                         "BENCH_fairness_age.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(result, f, indent=2, allow_nan=False)
     print("name,policy,max_age_p99,jain,never_selected,mean_round_s")
     for r in rows:
         print(f"fairness_age,{r['policy']},{r['max_age_p99']:.1f},"

@@ -66,7 +66,7 @@ def run(*, smoke=False, out_path=None, seed=0, rounds=None, clients=24):
                                         "BENCH_fl_convergence.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=1)
+        json.dump(result, f, indent=1, allow_nan=False)
 
     print("name,policy,final_acc,sim_time_s,max_age,tta_s")
     for r in rows:

@@ -78,7 +78,7 @@ def run(out_dir="experiments/bench", trials=200, seed=0, smoke=False,
     os.makedirs(out_dir, exist_ok=True)
     path = out or os.path.join(out_dir, "BENCH_joint_selection.json")
     with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+        json.dump(rows, f, indent=1, allow_nan=False)
     print("name,n_clients,pairing,selection,ratio_mean,ratio_max,"
           "vs_greedy_mean,vs_greedy_max")
     for r in rows:

@@ -11,7 +11,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops
 
@@ -82,7 +81,7 @@ def run(*, smoke=False, out_path=None, seed=0):
                                         "BENCH_kernels.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(result, f, indent=2, allow_nan=False)
     for r_ in rows:
         us = r_.get("us_xla_cpu") or r_.get("us_chunked_cpu") \
             or r_.get("us_ref_cpu")

@@ -85,7 +85,7 @@ def run(*, smoke=False, out_path=None, seed=0):
         "experiments", "bench", "BENCH_multicell_scaling.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(result, f, indent=2, allow_nan=False)
     print(f"{'N':>6} {'C':>4} {'drops/s':>10} {'vs C=1':>8} "
           f"{'handover':>9}")
     for r in rows:

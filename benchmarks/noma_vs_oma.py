@@ -55,7 +55,7 @@ def run(*, smoke=False, out_path=None, seed=0, trials=None):
                                         "BENCH_noma_vs_oma.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(result, f, indent=2, allow_nan=False)
     print("name,n_clients,model_mbit,t_noma_s,t_oma_s,speedup")
     for r in rows:
         print(f"noma_vs_oma,{r['n_clients']},{r['model_mbit']},"

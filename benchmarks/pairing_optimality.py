@@ -76,7 +76,7 @@ def run(out_dir="experiments/bench", trials=200, seed=0, smoke=False,
     os.makedirs(out_dir, exist_ok=True)
     path = out or os.path.join(out_dir, "BENCH_pairing_optimality.json")
     with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+        json.dump(rows, f, indent=1, allow_nan=False)
     print("name,n_clients,policy,ratio_mean,ratio_max,vs_sw_mean,vs_sw_max")
     for r in rows:
         print(f"pairing_optimality,{r['n_clients']},{r['policy']},"

@@ -75,7 +75,7 @@ def run(*, smoke=False, out_path=None, seed=0, rounds=None, clients=24):
                                         "BENCH_predictor_gain.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=1)
+        json.dump(result, f, indent=1, allow_nan=False)
 
     print("name,predictor,final_acc,mean_aou,mean_n_predicted,"
           "mean_pred_error")

@@ -85,7 +85,7 @@ def run(*, smoke=False, out_path=None, seed=0):
         "experiments", "bench", "BENCH_scenario_throughput.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(result, f, indent=2, allow_nan=False)
     print(f"{'scenario':>18} {'fused/s':>9} {'presampled/s':>13} "
           f"{'fused gain':>10}")
     for r in rows:

@@ -109,7 +109,7 @@ def main():
             d[p] = {k: np.asarray(v).tolist() for k, v in out[p].items()}
         dump[name] = d
     with open(path, "w") as f:
-        json.dump(dump, f)
+        json.dump(dump, f, allow_nan=False)
     print(f"wrote {path}")
 
 

@@ -42,7 +42,7 @@ def save(path: str, tree: Any, *, step: int = 0, extra: Optional[dict] = None
                 "extra": extra or {}}
     mtmp = fname + ".manifest.tmp"
     with open(mtmp, "w") as f:
-        json.dump(manifest, f)
+        json.dump(manifest, f, allow_nan=False)
     os.replace(mtmp, os.path.join(path, "manifest.json"))
     return fname
 

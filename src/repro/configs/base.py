@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Architecture config
@@ -213,14 +213,44 @@ class NOMAConfig:
     sic_order: str = "strong_first"  # uplink SIC: strongest decoded first
 
 
+# Canonical axis registries. Declared here so FLConfig can validate
+# eagerly without importing the implementing subsystems (configs must
+# stay import-leaf); the subsystems re-export them (core/plan.py,
+# core/pairing.py, fl/rounds.py) so call sites keep their natural homes.
+
 # engine admission-stage implementations (core/plan.resolve_admission;
-# DESIGN.md section 9). Declared here so FLConfig can validate eagerly
-# without importing core (configs must stay import-leaf).
+# DESIGN.md section 9)
 ADMISSIONS = ("auto", "full_sort", "segmented")
 
-# multi-cell base-station layouts (sim/topology.py, DESIGN.md section 10).
-# Same import-leaf rationale as ADMISSIONS.
+# multi-cell base-station layouts (sim/topology.py, DESIGN.md section 10)
 CELL_LAYOUTS = ("hex", "grid")
+
+# selection/RA policies (fl/server.py FLServer.select, engine priorities)
+POLICIES = ("age_noma", "age_noma_budget", "random", "channel",
+            "round_robin", "oma_age")
+
+# subchannel pairing policies (core/pairing.py, DESIGN.md section 7)
+PAIRINGS = ("strong_weak", "adjacent", "hungarian", "greedy_matching")
+
+# admitted-set selection modes (core/plan.py, DESIGN.md section 8)
+SELECTIONS = ("greedy_set", "joint")
+
+# scheduling engines (core/scheduler.py fp64 reference | core/engine.py)
+ENGINES = ("numpy", "jax")
+
+# server-side update predictors for unselected clients (fl/predictor.py)
+PREDICTORS = ("none", "stale", "ann")
+
+# FLConfig fields exempt from __post_init__ validation (reprolint
+# config-validation rule): each entry names WHY eager checking is
+# impossible or meaningless here, not merely unimplemented.
+_POST_INIT_EXEMPT = (
+    "scenario",       # registry lives in sim/scenario.py (not import-leaf);
+                      # get_scenario_config raises the eager ValueError with
+                      # the registered names at resolution
+    "engine_pallas",  # bool toggle: every value is meaningful
+    "seed",           # any int is a valid PRNG seed
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -297,15 +327,49 @@ class FLConfig:
     def __post_init__(self) -> None:
         # fail at construction, not deep inside a Monte-Carlo sweep — the
         # engine/planner re-validate their per-call overrides with the
-        # same message shape (no silent fallback anywhere on this axis)
-        if self.admission not in ADMISSIONS:
-            raise ValueError(f"unknown admission mode {self.admission!r} "
-                             f"(expected one of {ADMISSIONS})")
+        # same message shape (no silent fallback anywhere on this axis).
+        # Every field is checked here or listed in _POST_INIT_EXEMPT with
+        # a reason (enforced by the reprolint config-validation rule).
+        for field, registry in (("policy", POLICIES),
+                                ("engine", ENGINES),
+                                ("pairing", PAIRINGS),
+                                ("selection", SELECTIONS),
+                                ("admission", ADMISSIONS),
+                                ("cell_layout", CELL_LAYOUTS),
+                                ("predictor", PREDICTORS)):
+            value = getattr(self, field)
+            if value not in registry:
+                raise ValueError(f"unknown {field} {value!r} "
+                                 f"(expected one of {registry})")
+        for field in ("n_clients", "rounds", "local_epochs", "local_batch",
+                      "pred_embed_dim", "pred_hidden_dim", "pred_steps"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be >= 1, "
+                                 f"got {getattr(self, field)}")
+        for field in ("lr", "dirichlet_alpha", "cpu_cycles_per_sample",
+                      "pred_lr"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be > 0, "
+                                 f"got {getattr(self, field)}")
+        for field in ("age_exponent", "t_budget_s", "model_bits",
+                      "momentum", "pred_max_age"):
+            if getattr(self, field) < 0:
+                raise ValueError(f"{field} must be >= 0, "
+                                 f"got {getattr(self, field)}")
+        for field in ("pred_discount", "pred_blend"):
+            if not 0.0 <= getattr(self, field) <= 1.0:
+                raise ValueError(f"{field} must be in [0, 1], "
+                                 f"got {getattr(self, field)}")
+        lo, hi = self.samples_per_client
+        if not 1 <= lo <= hi:
+            raise ValueError(f"samples_per_client must satisfy "
+                             f"1 <= min <= max, got {(lo, hi)}")
+        flo, fhi = self.cpu_freq_range_ghz
+        if not 0 < flo <= fhi:
+            raise ValueError(f"cpu_freq_range_ghz must satisfy "
+                             f"0 < min <= max, got {(flo, fhi)}")
         if self.n_cells < 1:
             raise ValueError(f"n_cells must be >= 1, got {self.n_cells}")
-        if self.cell_layout not in CELL_LAYOUTS:
-            raise ValueError(f"unknown cell layout {self.cell_layout!r} "
-                             f"(expected one of {CELL_LAYOUTS})")
 
 
 # ---------------------------------------------------------------------------

@@ -1874,14 +1874,16 @@ def engine_schedule_to_numpy(out: EngineSchedule, b: int,
     strong = np.asarray(out.pair_strong[b])
     weak = np.asarray(out.pair_weak[b])
     pairs = [(int(i), int(j)) for i, j in zip(strong, weak) if i >= 0]
+    # host boundary: widening fp32 device outputs to the fp64 Schedule
+    # contract the numpy reference exposes — not engine-side arithmetic
     return Schedule(
         selected=np.asarray(out.selected[b]),
         pairs=pairs,
-        rates=np.asarray(out.rates[b], np.float64),
-        powers=np.asarray(out.powers[b], np.float64),
-        t_cmp=np.asarray(out.t_cmp[b], np.float64),
-        t_com=np.asarray(out.t_com[b], np.float64),
+        rates=np.asarray(out.rates[b], np.float64),      # reprolint: disable=precision-contract
+        powers=np.asarray(out.powers[b], np.float64),    # reprolint: disable=precision-contract
+        t_cmp=np.asarray(out.t_cmp[b], np.float64),      # reprolint: disable=precision-contract
+        t_com=np.asarray(out.t_com[b], np.float64),      # reprolint: disable=precision-contract
         t_round=float(out.t_round[b]),
-        agg_weights=np.asarray(out.agg_weights[b], np.float64),
+        agg_weights=np.asarray(out.agg_weights[b], np.float64),  # reprolint: disable=precision-contract
         info=info or {"engine": "jax"},
     )

@@ -15,8 +15,7 @@ cancels it, then decodes the weak user interference-free:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -48,10 +48,8 @@ import functools
 
 import numpy as np
 
-from repro.configs.base import NOMAConfig
+from repro.configs.base import PAIRINGS, NOMAConfig  # noqa: F401  (re-export)
 from repro.core import noma
-
-PAIRINGS = ("strong_weak", "adjacent", "hungarian", "greedy_matching")
 
 # m <= this: the hungarian policy solves the bottleneck exactly by
 # enumerating all perfect matchings (15 at m=3, 105 at m=4) — 2-opt has

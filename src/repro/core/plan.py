@@ -54,12 +54,12 @@ from typing import Optional
 
 import numpy as np
 
-from repro.configs.base import ADMISSIONS, FLConfig, NOMAConfig
+from repro.configs.base import (  # noqa: F401  (SELECTIONS re-export)
+    ADMISSIONS, SELECTIONS, FLConfig, NOMAConfig,
+)
 from repro.core import aoi, noma, pairing, roundtime
 from repro.obs import trace
 from repro.obs.metrics import aou_histogram
-
-SELECTIONS = ("greedy_set", "joint")
 
 # FLConfig.admission = "auto" picks the engine's admission implementation
 # by population size: below this many clients the two full_sort bitonic

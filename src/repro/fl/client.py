@@ -2,7 +2,6 @@
 (same pytree structure), driven by the host round loop."""
 from __future__ import annotations
 
-import functools
 from typing import Iterable
 
 import jax

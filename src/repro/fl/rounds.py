@@ -9,13 +9,12 @@ from typing import Optional
 
 import numpy as np
 
-from repro.configs.base import FLConfig, ModelConfig, NOMAConfig
+from repro.configs.base import (  # noqa: F401  (POLICIES re-export)
+    POLICIES, FLConfig, ModelConfig, NOMAConfig,
+)
 from repro.data import TaskConfig
 from repro.fl.server import FLServer, History
 from repro.obs import RunLedger
-
-POLICIES = ("age_noma", "age_noma_budget", "random", "channel",
-            "round_robin", "oma_age")
 
 # the Monte-Carlo driver covers every FLServer policy (engine-side
 # round_robin/random priorities + budget auto-calibration); the old
@@ -130,8 +129,10 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
     envs = scn.rollout(k_env, r, (s, n)) if presampled else None
     auto_budget = None
     if "age_noma_budget" in policies and t_budget <= 0.0:
+        # first_env deliberately replays round 0 of rollout's key
+        # schedule so the budget calibration sees the same draws
         env0 = (tuple(a[0] for a in envs) if envs is not None
-                else scn.first_env(k_env, r, (s, n)))
+                else scn.first_env(k_env, r, (s, n)))  # reprolint: disable=key-reuse
         ref = eng.schedule_batch(env0[0], env0[1], env0[2],
                                  jnp.ones((s, n), jnp.float32), model_bits,
                                  priority=env0[0],

@@ -19,7 +19,6 @@ Per round:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax

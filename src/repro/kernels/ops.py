@@ -9,9 +9,7 @@
 """
 from __future__ import annotations
 
-import functools
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import fedagg as _fedagg

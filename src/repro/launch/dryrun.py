@@ -277,7 +277,7 @@ def main():
                            "mesh": "multi" if mp else "single"}
                     failures.append(tag)
                 with open(os.path.join(args.out, tag + ".json"), "w") as f:
-                    json.dump(rec, f, indent=1)
+                    json.dump(rec, f, indent=1, allow_nan=False)
     if failures:
         print("FAILURES:", failures)
         raise SystemExit(1)

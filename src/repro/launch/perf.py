@@ -74,7 +74,7 @@ def run_pair(name: str, out_dir: str = "experiments/perf", *,
             rows.append(rec)
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+        json.dump(rows, f, indent=1, allow_nan=False)
     print(f"\n{'variant':24s} {'mem/chip':>9s} {'t_c_s':>8s} {'t_m_s':>8s} "
           f"{'t_floor':>8s} {'t_l_s':>8s}")
     for r in rows:

@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # B/s / chip

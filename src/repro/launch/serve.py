@@ -15,7 +15,6 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import zoo
-from repro.models import transformer as T
 
 
 def main():

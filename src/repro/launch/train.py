@@ -86,7 +86,7 @@ def main():
     tag = f"{args.arch}__{args.policy}__s{args.seed}"
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump({"args": vars(args), "history": hist.as_dict(),
-                   "wall_s": wall}, f, indent=1)
+                   "wall_s": wall}, f, indent=1, allow_nan=False)
     print(f"[train] history -> {args.out}/{tag}.json")
 
 

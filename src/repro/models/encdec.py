@@ -7,7 +7,6 @@ carve-out — the encoder consumes precomputed frame embeddings
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import dense_init, zeros_init
+from repro.models.layers import dense_init
 
 WKV_CHUNK = 128
 

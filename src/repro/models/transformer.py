@@ -9,8 +9,7 @@ which is what makes 64-layer x 512-device dry-run compiles tractable
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

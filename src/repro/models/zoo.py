@@ -13,7 +13,6 @@ Sharding policy (DESIGN.md section 3):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax

@@ -1,7 +1,6 @@
 """Integration + property tests for the FL runtime (server, aggregation,
 data pipeline, checkpointing)."""
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
@@ -164,7 +163,7 @@ class TestCheckpoint:
 
 class TestOptim:
     def test_sgd_momentum(self):
-        from repro.optim import SGD, apply_updates
+        from repro.optim import SGD
         opt = SGD(lr=0.1, momentum=0.9)
         p = {"w": jnp.ones((2,))}
         st_ = opt.init(p)

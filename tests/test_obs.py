@@ -278,11 +278,11 @@ def test_regress_gate_fails_on_3x_collapse(tmp_path):
             {"n": 1000, "k": 8, "drops": 16, "drops_per_s_jax": 300.0}]
     doc = {"benchmark": "engine_throughput", "backend": "cpu",
            "smoke": False, "rows": rows}
-    (base / "BENCH_engine_throughput.json").write_text(json.dumps(doc))
-    bad = json.loads(json.dumps(doc))
+    (base / "BENCH_engine_throughput.json").write_text(json.dumps(doc, allow_nan=False))
+    bad = json.loads(json.dumps(doc, allow_nan=False))
     bad["rows"][1]["drops_per_s_jax"] /= 3.0  # 3x collapse on one row
     bad["rows"][1]["drops"] = 4  # sweep-size knob must not break matching
-    (fresh / "BENCH_engine_throughput.json").write_text(json.dumps(bad))
+    (fresh / "BENCH_engine_throughput.json").write_text(json.dumps(bad, allow_nan=False))
     r = _regress(fresh, base)
     assert r.returncode == 1, r.stdout + r.stderr
     assert "REGRESSION" in r.stdout and "n=1000" in r.stdout
@@ -294,11 +294,11 @@ def test_regress_gate_passes_clean_and_reports_unmatched(tmp_path):
     base.mkdir(), fresh.mkdir()
     doc = {"rows": [{"n": 100, "drops_per_s": 500.0},
                     {"n": 9999, "drops_per_s": 100.0}]}
-    (base / "BENCH_x.json").write_text(json.dumps(doc))
+    (base / "BENCH_x.json").write_text(json.dumps(doc, allow_nan=False))
     ok = {"rows": [{"n": 100, "drops_per_s": 480.0},
                    {"n": 7, "drops_per_s": 1.0}]}  # n=7: no baseline row
-    (fresh / "BENCH_x.json").write_text(json.dumps(ok))
-    (fresh / "BENCH_new.json").write_text(json.dumps({"rows": []}))
+    (fresh / "BENCH_x.json").write_text(json.dumps(ok, allow_nan=False))
+    (fresh / "BENCH_new.json").write_text(json.dumps({"rows": []}, allow_nan=False))
     r = _regress(fresh, base)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "no baseline row" in r.stdout

@@ -7,7 +7,6 @@ Statistical tests use fixed seeds and wide sample sets so they are
 deterministic; tolerances are quoted next to the estimator variance they
 cover.
 """
-import dataclasses
 
 import jax
 import numpy as np
@@ -15,7 +14,6 @@ import pytest
 
 from repro.configs import FLConfig, NOMAConfig
 from repro.core import noma
-from repro.core.engine import WirelessEngine
 from repro.fl.rounds import MC_POLICIES, POLICIES, run_montecarlo
 from repro.sim import (
     SCENARIOS,

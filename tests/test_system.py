@@ -2,7 +2,6 @@
 loop exhibits the paper's claimed orderings on a miniature instance, and the
 distributed dry-run machinery works on a small host mesh (subprocess)."""
 import dataclasses
-import json
 import os
 import subprocess
 import sys

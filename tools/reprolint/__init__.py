@@ -1,0 +1,17 @@
+"""reprolint: contract-enforcing static analysis for this reproduction.
+
+    PYTHONPATH=src python -m tools.reprolint --check src tests benchmarks
+
+AST-based, repo-specific rules encode the invariants the paper's math
+demands (DESIGN.md section 12): fp64 twin purity, jit tracing safety,
+PRNG key discipline, precision boundaries, eager config validation,
+json hygiene, dead pytree leaves, and benchmark/doc cross-references.
+See ``tools/reprolint/core.py`` for the framework (suppressions,
+baseline, severities) and ``--list-rules`` for the catalogue.
+"""
+from tools.reprolint import contracts, flow  # noqa: F401  (rule registration)
+from tools.reprolint.core import (  # noqa: F401
+    FileContext, Finding, RepoContext, Rule, RULES, all_rules,
+    apply_baseline, build_repo_context, collect_files, load_baseline,
+    run_rules, save_baseline,
+)

@@ -1,0 +1,94 @@
+"""reprolint CLI — check-only (no --fix by design: every contract
+violation needs a human to decide twin vs engine semantics).
+
+    python -m tools.reprolint --check src tests benchmarks
+    python -m tools.reprolint --check src --json
+    python -m tools.reprolint --list-rules
+    python -m tools.reprolint --check src --write-baseline
+
+Exit status: 0 = no non-baselined error findings, 1 = findings,
+2 = usage error. ``warn``-severity findings are reported but never
+fail the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from tools.reprolint import core
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.reprolint",
+        description="contract-enforcing static analysis for this repo")
+    ap.add_argument("paths", nargs="*", help="files/directories to lint")
+    ap.add_argument("--check", action="store_true",
+                    help="lint the given paths (the default action)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="baseline file (default: tools/reprolint/"
+                         "baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather all current findings into the "
+                         "baseline file and exit 0")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--root", default=".",
+                    help="repo root (default: cwd)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in core.all_rules():
+            print(f"{rule.name:20s} [{rule.severity}] {rule.description}")
+        return 0
+    if not args.paths:
+        ap.print_usage()
+        print("error: no paths given (try: --check src tests benchmarks)",
+              file=sys.stderr)
+        return 2
+
+    root = pathlib.Path(args.root).resolve()
+    baseline_path = (pathlib.Path(args.baseline) if args.baseline
+                     else root / "tools" / "reprolint" / "baseline.json")
+    files = core.collect_files(args.paths, root)
+    ctx = core.build_repo_context(files, root)
+    findings = core.run_rules(ctx, core.all_rules(args.rule))
+
+    if args.write_baseline:
+        core.save_baseline(baseline_path, findings)
+        print(f"wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    baseline = core.load_baseline(baseline_path)
+    new, grandfathered, stale = core.apply_baseline(findings, baseline)
+    errors = [f for f in new if f.severity == "error"]
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.as_dict() for f in new],
+            "grandfathered": len(grandfathered),
+            "stale_baseline_entries": stale,
+            "files_checked": len(files),
+            "ok": not errors,
+        }, indent=2, allow_nan=False))
+    else:
+        for f in new:
+            print(f.render())
+        parts = [f"{len(files)} files", f"{len(new)} finding(s)"]
+        if grandfathered:
+            parts.append(f"{len(grandfathered)} baselined")
+        if stale:
+            parts.append(f"{len(stale)} STALE baseline entries "
+                         f"(remove them from {baseline_path.name})")
+        print(f"reprolint: {', '.join(parts)}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,263 @@
+"""reprolint framework: findings, rule registry, suppressions, baseline.
+
+The contracts this linter enforces are the repo's own (DESIGN.md
+section 12): fp64 reference twins stay jax-free, jitted engine code
+stays numpy-free and branch-safe on traced values, the PRNG key
+schedule is never reused, precision boundaries hold, configs validate
+eagerly, pytree leaves are read somewhere, and the benchmark/doc
+cross-references resolve. Rules are AST-based (never executed code),
+registered via :func:`register`, and scoped per file or per repo.
+
+Suppression: append ``# reprolint: disable=rule-name`` (comma-list or
+``all``) to the offending line, or put
+``# reprolint: disable-next-line=rule-name`` on the line above.
+Grandfathered findings live in ``tools/reprolint/baseline.json`` —
+matched by (rule, path, message), so they survive unrelated line moves
+but expire when the finding itself changes.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+import subprocess
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("error", "warn")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*(disable|disable-next-line)\s*=\s*"
+    r"([A-Za-z0-9_,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    severity: str
+    path: str            # repo-relative posix path
+    line: int            # 1-based; 0 for whole-file/repo findings
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: line numbers churn on unrelated edits, so
+        the fingerprint is (rule, path, message)."""
+        return (self.rule, self.path, self.message)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.severity}] "
+                f"{self.rule}: {self.message}")
+
+
+@dataclasses.dataclass
+class FileContext:
+    """One parsed python file. ``tree`` is None when the file does not
+    parse — the ``syntax-error`` pseudo-finding is emitted instead."""
+    relpath: str
+    source: str
+    tree: Optional[ast.AST]
+    lines: List[str] = dataclasses.field(default_factory=list)
+    suppressions: Dict[int, set] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_source(cls, relpath: str, source: str) -> "FileContext":
+        try:
+            tree = ast.parse(source)
+        except SyntaxError:
+            tree = None
+        lines = source.splitlines()
+        return cls(relpath=relpath, source=source, tree=tree, lines=lines,
+                   suppressions=_parse_suppressions(lines))
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        rules = self.suppressions.get(line)
+        return bool(rules) and ("all" in rules or rule in rules)
+
+
+def _parse_suppressions(lines: Sequence[str]) -> Dict[int, set]:
+    """Map line number -> set of rule names disabled on that line."""
+    out: Dict[int, set] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
+        target = i + 1 if m.group(1) == "disable-next-line" else i
+        out.setdefault(target, set()).update(rules)
+    return out
+
+
+@dataclasses.dataclass
+class RepoContext:
+    """Cross-file context for repo-level rules. All disk/git-derived
+    fields are plain data so tests can inject them."""
+    files: List[FileContext]
+    root: Optional[pathlib.Path] = None
+    design_md: Optional[str] = None       # DESIGN.md text (None = absent)
+    gitignore: Optional[str] = None       # .gitignore text
+    tracked_files: Optional[List[str]] = None  # git ls-files (None = no git)
+
+    def file(self, suffix: str) -> Optional[FileContext]:
+        for fc in self.files:
+            if fc.relpath.endswith(suffix):
+                return fc
+        return None
+
+
+class Rule:
+    """Base rule. Subclasses set ``name``/``severity``/``description``
+    and override exactly one of ``check_file`` / ``check_repo``."""
+    name: str = ""
+    severity: str = "error"
+    description: str = ""
+
+    def check_file(self, fc: FileContext) -> Iterable[Finding]:
+        return ()
+
+    def check_repo(self, ctx: RepoContext) -> Iterable[Finding]:
+        return ()
+
+    def finding(self, path: str, line: int, message: str) -> Finding:
+        return Finding(rule=self.name, severity=self.severity,
+                       path=path, line=line, message=message)
+
+
+RULES: Dict[str, type] = {}
+
+
+def register(cls: type) -> type:
+    if not cls.name:
+        raise ValueError(f"rule class {cls.__name__} has no name")
+    if cls.severity not in SEVERITIES:
+        raise ValueError(f"rule {cls.name}: bad severity {cls.severity!r}")
+    if cls.name in RULES:
+        raise ValueError(f"duplicate rule name {cls.name!r}")
+    RULES[cls.name] = cls
+    return cls
+
+
+def all_rules(only: Optional[Sequence[str]] = None) -> List[Rule]:
+    names = list(RULES) if only is None else list(only)
+    unknown = [n for n in names if n not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule(s) {unknown} "
+                         f"(registered: {sorted(RULES)})")
+    return [RULES[n]() for n in names]
+
+
+# ---------------------------------------------------------------------------
+# running
+# ---------------------------------------------------------------------------
+
+
+def collect_files(paths: Sequence[str],
+                  root: pathlib.Path) -> List[FileContext]:
+    """Gather ``*.py`` under each path (file or directory), repo-relative,
+    sorted, skipping caches."""
+    seen = {}
+    for p in paths:
+        target = (root / p).resolve()
+        if target.is_file():
+            candidates = [target]
+        else:
+            candidates = sorted(target.rglob("*.py"))
+        for f in candidates:
+            if "__pycache__" in f.parts:
+                continue
+            rel = f.relative_to(root).as_posix()
+            if rel not in seen:
+                seen[rel] = FileContext.from_source(
+                    rel, f.read_text(encoding="utf-8"))
+    return [seen[k] for k in sorted(seen)]
+
+
+def build_repo_context(files: List[FileContext],
+                       root: pathlib.Path) -> RepoContext:
+    design = root / "DESIGN.md"
+    gitignore = root / ".gitignore"
+    tracked = None
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=root, timeout=30,
+                             capture_output=True, text=True)
+        if out.returncode == 0:
+            tracked = out.stdout.splitlines()
+    except (OSError, subprocess.SubprocessError):
+        tracked = None
+    return RepoContext(
+        files=files, root=root,
+        design_md=design.read_text() if design.is_file() else None,
+        gitignore=gitignore.read_text() if gitignore.is_file() else None,
+        tracked_files=tracked)
+
+
+def run_rules(ctx: RepoContext,
+              rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Run every rule over the context; returns unsuppressed findings
+    sorted by (path, line, rule). Unparseable files yield one
+    ``syntax-error`` finding each and are skipped by AST rules."""
+    if rules is None:
+        rules = all_rules()
+    findings: List[Finding] = []
+    by_path = {fc.relpath: fc for fc in ctx.files}
+    for fc in ctx.files:
+        if fc.tree is None:
+            findings.append(Finding("syntax-error", "error", fc.relpath, 1,
+                                    "file does not parse"))
+    for rule in rules:
+        for fc in ctx.files:
+            if fc.tree is None:
+                continue
+            findings.extend(rule.check_file(fc))
+        findings.extend(rule.check_repo(ctx))
+    kept = []
+    for f in findings:
+        fc = by_path.get(f.path)
+        if fc is not None and fc.suppressed(f.rule, f.line):
+            continue
+        kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: pathlib.Path) -> List[dict]:
+    if not path.is_file():
+        return []
+    data = json.loads(path.read_text())
+    if not isinstance(data, dict) or "findings" not in data:
+        raise ValueError(f"malformed baseline {path}: expected "
+                         "{'version': 1, 'findings': [...]}")
+    return list(data["findings"])
+
+
+def save_baseline(path: pathlib.Path, findings: Sequence[Finding]) -> None:
+    entries = [{"rule": f.rule, "path": f.path, "message": f.message}
+               for f in findings]
+    path.write_text(json.dumps(
+        {"version": 1, "findings": entries}, indent=2, allow_nan=False,
+        sort_keys=True) + "\n")
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: Sequence[dict]
+                   ) -> Tuple[List[Finding], List[Finding], List[dict]]:
+    """Split findings into (new, grandfathered); also return baseline
+    entries that matched nothing (stale — candidates for deletion)."""
+    index = {(b["rule"], b["path"], b["message"]): b for b in baseline}
+    matched_keys = set()
+    new, old = [], []
+    for f in findings:
+        if f.key() in index:
+            matched_keys.add(f.key())
+            old.append(f)
+        else:
+            new.append(f)
+    stale = [b for k, b in index.items() if k not in matched_keys]
+    return new, old, stale

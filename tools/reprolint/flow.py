@@ -1,0 +1,525 @@
+"""Flow-sensitive rules: traced-branch hazards, numpy-on-traced-values,
+and PRNG key reuse.
+
+All three share one approximation of the engine's tracing contract
+(DESIGN.md section 5): inside a ``jax.jit``-decorated function, every
+parameter that is not listed in ``static_argnames``/``static_argnums``
+is a tracer, and so is anything computed from it — EXCEPT shape/dtype
+metadata (``x.shape``, ``x.ndim``, ``x.dtype``, ``x.size``, ``len(x)``),
+which is concrete under trace and legal to branch on. The taint
+analysis below propagates that to a fixpoint over simple assignments;
+it is deliberately conservative in both directions (no call-graph, no
+interprocedural flow) so that every finding is locally explainable.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.reprolint.core import FileContext, Finding, Rule, register
+
+# attribute reads that yield concrete (non-traced) metadata under trace
+SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type", "sharding"}
+# calls whose results are always concrete python values
+CONCRETE_CALLS = {"len", "isinstance", "type", "hasattr", "getattr", "range",
+                  "id", "repr", "str"}
+
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local alias -> dotted module/object path, e.g.
+    ``{"jnp": "jax.numpy", "partial": "functools.partial"}``."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def dotted_name(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve an expression like ``jnp.where`` to ``jax.numpy.where``
+    using the file's import aliases; None when not a plain dotted path."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    head = aliases.get(node.id, node.id)
+    return ".".join([head] + list(reversed(parts)))
+
+
+def jit_static_args(fn: ast.FunctionDef, aliases: Dict[str, str]
+                    ) -> Optional[Set[str]]:
+    """If ``fn`` is jit-decorated, return its static parameter names
+    (possibly empty); None when not jitted. Understands bare ``jax.jit``
+    and ``functools.partial(jax.jit, static_argnames=..., static_argnums=...)``."""
+    all_params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)]
+    for dec in fn.decorator_list:
+        call = dec if isinstance(dec, ast.Call) else None
+        target = call.func if call else dec
+        name = dotted_name(target, aliases)
+        if name == "jax.jit":
+            statics: Set[str] = set()
+            if call:
+                statics |= _static_names_from_call(call, all_params)
+            return statics
+        if name in ("functools.partial", "partial") and call and call.args:
+            inner = dotted_name(call.args[0], aliases)
+            if inner == "jax.jit":
+                return _static_names_from_call(call, all_params)
+    return None
+
+
+def _static_names_from_call(call: ast.Call, params: List[str]) -> Set[str]:
+    statics: Set[str] = set()
+    for kw in call.keywords:
+        try:
+            val = ast.literal_eval(kw.value)
+        except (ValueError, SyntaxError):
+            continue
+        if kw.arg == "static_argnames":
+            names = [val] if isinstance(val, str) else list(val)
+            statics.update(names)
+        elif kw.arg == "static_argnums":
+            nums = [val] if isinstance(val, int) else list(val)
+            statics.update(params[i] for i in nums if 0 <= i < len(params))
+    return statics
+
+
+class TaintAnalysis:
+    """Fixpoint taint over one function body. Parameters outside the
+    static set start tainted; assignments propagate; shape/dtype reads
+    and concrete builtins sever."""
+
+    def __init__(self, fn: ast.FunctionDef, static: Set[str],
+                 outer_tainted: Optional[Set[str]] = None):
+        self.fn = fn
+        params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)]
+        if fn.args.vararg:
+            params.append(fn.args.vararg.arg)
+        if fn.args.kwarg:
+            params.append(fn.args.kwarg.arg)
+        self.tainted: Set[str] = set(outer_tainted or ())
+        self.tainted |= {p for p in params if p not in static}
+        self._fixpoint()
+
+    # -- expression query ---------------------------------------------------
+
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in SHAPE_ATTRS:
+                return False
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Compare) and \
+                all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            # `x is None` / `x is not None` is a structural check on the
+            # python value, not on traced contents — jit retraces per
+            # pytree structure, so branching on it is legal
+            return False
+        if isinstance(node, ast.Call):
+            fname = node.func
+            simple = fname.id if isinstance(fname, ast.Name) else None
+            if simple in CONCRETE_CALLS:
+                return False
+            parts = ([self.expr_tainted(a) for a in node.args]
+                     + [self.expr_tainted(k.value) for k in node.keywords]
+                     + ([self.expr_tainted(fname.value)]
+                        if isinstance(fname, ast.Attribute)
+                        and fname.attr not in SHAPE_ATTRS else []))
+            return any(parts)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value) or \
+                self.expr_tainted(node.slice)
+        if isinstance(node, (ast.Lambda, ast.Constant)):
+            return False
+        if isinstance(node, ast.NamedExpr):
+            return self.expr_tainted(node.value)
+        return any(self.expr_tainted(c) for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+
+    def tainted_names(self, node: ast.AST) -> List[str]:
+        """The tainted Name roots inside ``node`` (for messages)."""
+        out = []
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in self.tainted \
+                    and sub.id not in out:
+                out.append(sub.id)
+        return out
+
+    # -- propagation --------------------------------------------------------
+
+    def _assign_targets(self, target: ast.AST) -> Iterable[str]:
+        if isinstance(target, ast.Name):
+            yield target.id
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                yield from self._assign_targets(el)
+        elif isinstance(target, ast.Starred):
+            yield from self._assign_targets(target.value)
+
+    def _fixpoint(self) -> None:
+        for _ in range(20):
+            before = len(self.tainted)
+            for node in ast.walk(self.fn):
+                if isinstance(node, ast.FunctionDef) and node is not self.fn:
+                    continue  # nested defs analyzed separately
+                if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    value = node.value
+                    if value is None or not self.expr_tainted(value):
+                        continue
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        self.tainted.update(self._assign_targets(t))
+                elif isinstance(node, ast.AugAssign):
+                    if self.expr_tainted(node.value):
+                        self.tainted.update(
+                            self._assign_targets(node.target))
+                elif isinstance(node, ast.For):
+                    if self.expr_tainted(node.iter):
+                        self.tainted.update(
+                            self._assign_targets(node.target))
+                elif isinstance(node, ast.NamedExpr):
+                    if self.expr_tainted(node.value):
+                        self.tainted.add(node.target.id)
+                elif isinstance(node, ast.withitem):
+                    if node.optional_vars is not None and \
+                            self.expr_tainted(node.context_expr):
+                        self.tainted.update(
+                            self._assign_targets(node.optional_vars))
+            if len(self.tainted) == before:
+                return
+
+
+def jitted_functions(tree: ast.AST, aliases: Dict[str, str]
+                     ) -> List[Tuple[ast.FunctionDef, Set[str]]]:
+    """Every jit-decorated function with its static param names."""
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            statics = jit_static_args(node, aliases)
+            if statics is not None:
+                out.append((node, statics))
+    return out
+
+
+def _walk_traced_scopes(fn: ast.FunctionDef, statics: Set[str]
+                        ) -> Iterable[Tuple[ast.FunctionDef, TaintAnalysis]]:
+    """Yield (scope, taint) for the jitted function and every nested def
+    (whose parameters are traced — they are lax loop/cond bodies)."""
+    root = TaintAnalysis(fn, statics)
+    yield fn, root
+    stack = [(fn, root)]
+    while stack:
+        scope, outer = stack.pop()
+        for node in ast.walk(scope):
+            if isinstance(node, ast.FunctionDef) and node is not scope and \
+                    _direct_parent_scope(scope, node):
+                inner = TaintAnalysis(node, set(),
+                                      outer_tainted=outer.tainted)
+                yield node, inner
+                stack.append((node, inner))
+
+
+def _direct_parent_scope(scope: ast.FunctionDef,
+                         node: ast.FunctionDef) -> bool:
+    """True when ``node`` is nested in ``scope`` with no intermediate
+    function scope (so each def is visited exactly once)."""
+    for sub in ast.walk(scope):
+        if isinstance(sub, ast.FunctionDef) and sub not in (scope, node):
+            if any(n is node for n in ast.walk(sub)):
+                return False
+    return True
+
+
+def _own_statements(scope: ast.FunctionDef) -> Iterable[ast.stmt]:
+    """Statements of ``scope`` excluding nested function bodies."""
+    stack: List[ast.stmt] = list(scope.body)
+    while stack:
+        st = stack.pop(0)
+        yield st
+        if isinstance(st, ast.FunctionDef):
+            continue
+        for field in ("body", "orelse", "finalbody", "handlers"):
+            for child in getattr(st, field, []):
+                if isinstance(child, ast.ExceptHandler):
+                    stack.extend(child.body)
+                elif isinstance(child, ast.stmt):
+                    stack.append(child)
+
+
+@register
+class TracedBranchRule(Rule):
+    """Python control flow on traced values inside jitted code raises
+    ``TracerBoolConversionError`` at trace time at best, or silently
+    bakes one trace's branch at worst. Branch on static args or use
+    ``lax.cond``/``jnp.where``."""
+    name = "traced-branch"
+    severity = "error"
+    description = ("no python if/while/assert on values derived from "
+                   "non-static parameters inside jit-decorated functions")
+
+    def check_file(self, fc: FileContext) -> Iterable[Finding]:
+        aliases = import_aliases(fc.tree)
+        for fn, statics in jitted_functions(fc.tree, aliases):
+            for scope, taint in _walk_traced_scopes(fn, statics):
+                for st in _own_statements(scope):
+                    test = getattr(st, "test", None)
+                    if not isinstance(st, (ast.If, ast.While, ast.Assert)):
+                        continue
+                    if test is not None and taint.expr_tainted(test):
+                        names = ", ".join(taint.tainted_names(test))
+                        kind = type(st).__name__.lower()
+                        yield self.finding(
+                            fc.relpath, st.lineno,
+                            f"python {kind} on traced value(s) [{names}] "
+                            f"inside jitted `{fn.name}` — use lax.cond/"
+                            f"jnp.where or make the argument static")
+
+
+@register
+class EngineNumpyRule(Rule):
+    """A ``np.*`` call on a traced value inside jitted code forces a
+    host sync (or fails outright) and silently breaks the fixed-shape
+    contract; numpy belongs to the fp64 reference twins only."""
+    name = "engine-numpy"
+    severity = "error"
+    description = ("no numpy calls on traced values inside jit-decorated "
+                   "functions (np on static/constant operands is fine)")
+
+    def check_file(self, fc: FileContext) -> Iterable[Finding]:
+        aliases = import_aliases(fc.tree)
+        np_names = {alias for alias, mod in aliases.items()
+                    if mod == "numpy" or mod.startswith("numpy.")}
+        if not np_names:
+            return
+        for fn, statics in jitted_functions(fc.tree, aliases):
+            for scope, taint in _walk_traced_scopes(fn, statics):
+                for node in ast.walk(scope):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = dotted_name(node.func, aliases) or ""
+                    if not name.startswith("numpy."):
+                        continue
+                    args = list(node.args) + [k.value for k in node.keywords]
+                    hot = [a for a in args if taint.expr_tainted(a)]
+                    if hot:
+                        names = ", ".join(
+                            n for a in hot for n in taint.tainted_names(a))
+                        yield self.finding(
+                            fc.relpath, node.lineno,
+                            f"numpy call `{name}` on traced value(s) "
+                            f"[{names}] inside jitted `{fn.name}` — "
+                            f"use jnp (or hoist to the host boundary)")
+
+
+# ---------------------------------------------------------------------------
+# key discipline
+# ---------------------------------------------------------------------------
+
+_KEY_FRESHENERS = {"jax.random.split", "jax.random.fold_in",
+                   "jax.random.PRNGKey", "jax.random.key",
+                   "jax.random.clone"}
+
+
+def _is_key_param(name: str) -> bool:
+    return name == "key" or name.endswith("_key") or name == "rng_key"
+
+
+class _KeyState:
+    """Per-variable consumption count since the last refresh."""
+
+    def __init__(self) -> None:
+        self.counts: Dict[str, int] = {}
+
+    def copy(self) -> "_KeyState":
+        st = _KeyState()
+        st.counts = dict(self.counts)
+        return st
+
+    def merge_max(self, other: "_KeyState") -> None:
+        for k, v in other.counts.items():
+            self.counts[k] = max(self.counts.get(k, 0), v)
+
+
+@register
+class KeyReuseRule(Rule):
+    """Consuming the same ``jax.random`` key twice reuses entropy —
+    the two draws are correlated and the scenario key-schedule contract
+    (DESIGN.md section 6) is broken. Split or fold_in between uses."""
+    name = "key-reuse"
+    severity = "error"
+    description = ("a PRNG key variable must not be consumed by two calls "
+                   "without an interleaving split/fold_in")
+
+    def check_file(self, fc: FileContext) -> Iterable[Finding]:
+        self._aliases = import_aliases(fc.tree)
+        if not any(m.startswith("jax") for m in self._aliases.values()):
+            return
+        for node in ast.walk(fc.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_function(fc, node)
+
+    def _check_function(self, fc: FileContext,
+                        fn: ast.FunctionDef) -> Iterable[Finding]:
+        state = _KeyState()
+        params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)]
+        for p in params:
+            if _is_key_param(p):
+                state.counts[p] = 0
+        findings: List[Finding] = []
+        self._scan_block(fc, fn.body, state, findings, in_loop=False)
+        return findings
+
+    # -- helpers ------------------------------------------------------------
+
+    def _call_dotted(self, node: ast.Call) -> str:
+        return dotted_name(node.func, self._aliases) or ""
+
+    def _is_freshener(self, node: ast.AST) -> bool:
+        return (isinstance(node, ast.Call)
+                and self._call_dotted(node) in _KEY_FRESHENERS)
+
+    def _consume(self, fc: FileContext, expr: Optional[ast.AST],
+                 state: _KeyState, findings: List[Finding]) -> None:
+        """Count tracked keys passed as call arguments. Passing a key to
+        ``split``/``fold_in``/... is a *derivation* (produces a distinct
+        key) and does not consume entropy — the idiom
+        ``normal(key); normal(fold_in(key, 1))`` is fine; the hazard is
+        the same key reaching two sampling/escape calls. Ternaries merge
+        branch-wise (both arms may consume the key once)."""
+        if expr is None:
+            return
+        if isinstance(expr, ast.IfExp):
+            self._consume(fc, expr.test, state, findings)
+            then_state, else_state = state.copy(), state.copy()
+            self._consume(fc, expr.body, then_state, findings)
+            self._consume(fc, expr.orelse, else_state, findings)
+            then_state.merge_max(else_state)
+            state.counts = then_state.counts
+            return
+        if isinstance(expr, ast.Call):
+            derivation = self._is_freshener(expr)
+            self._consume(fc, expr.func, state, findings)
+            for arg in list(expr.args) + [k.value for k in expr.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in state.counts:
+                    if derivation:
+                        continue
+                    state.counts[arg.id] += 1
+                    if state.counts[arg.id] == 2:
+                        findings.append(self.finding(
+                            fc.relpath, expr.lineno,
+                            f"key `{arg.id}` consumed a second time "
+                            f"without an interleaving split/fold_in"))
+                else:
+                    self._consume(fc, arg, state, findings)
+            return
+        for child in ast.iter_child_nodes(expr):
+            if isinstance(child, (ast.expr, ast.keyword,
+                                  ast.comprehension)):
+                self._consume(fc, child, state, findings)
+
+    def _refresh_targets(self, targets: Iterable[ast.AST],
+                         state: _KeyState) -> None:
+        for t in targets:
+            if isinstance(t, ast.Name):
+                state.counts[t.id] = 0
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                self._refresh_targets(t.elts, state)
+
+    @staticmethod
+    def _terminates(body: List[ast.stmt]) -> bool:
+        """True when control never falls out of ``body`` (trailing
+        return/raise/break/continue, possibly via an if/else)."""
+        if not body:
+            return False
+        last = body[-1]
+        if isinstance(last, (ast.Return, ast.Raise, ast.Break,
+                             ast.Continue)):
+            return True
+        if isinstance(last, ast.If):
+            return (KeyReuseRule._terminates(last.body)
+                    and KeyReuseRule._terminates(last.orelse))
+        return False
+
+    def _scan_block(self, fc: FileContext, body: List[ast.stmt],
+                    state: _KeyState, findings: List[Finding],
+                    in_loop: bool) -> None:
+        for st in body:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue  # separate scope
+            if isinstance(st, ast.Assign):
+                self._consume(fc, st.value, state, findings)
+                if self._is_freshener(st.value):
+                    self._refresh_targets(st.targets, state)
+                else:
+                    # plain reassignment still rebinds the name
+                    for t in st.targets:
+                        if isinstance(t, ast.Name) and t.id in state.counts:
+                            del state.counts[t.id]
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                self._consume(fc, st.value, state, findings)
+                if self._is_freshener(st.value):
+                    self._refresh_targets([st.target], state)
+            elif isinstance(st, ast.If):
+                self._consume(fc, st.test, state, findings)
+                then_state = state.copy()
+                else_state = state.copy()
+                self._scan_block(fc, st.body, then_state, findings, in_loop)
+                self._scan_block(fc, st.orelse, else_state, findings,
+                                 in_loop)
+                # a branch that never falls through (early return/raise)
+                # contributes nothing to the post-if state
+                if self._terminates(st.body):
+                    state.counts = else_state.counts
+                elif self._terminates(st.orelse):
+                    state.counts = then_state.counts
+                else:
+                    then_state.merge_max(else_state)
+                    state.counts = then_state.counts
+            elif isinstance(st, (ast.For, ast.While)):
+                iter_expr = getattr(st, "iter", None) or st.test
+                self._consume(fc, iter_expr, state, findings)
+                loop_state = state.copy()
+                self._scan_block(fc, st.body, loop_state, findings,
+                                 in_loop=True)
+                # a key consumed once per iteration is consumed twice
+                # across iterations unless refreshed inside the body
+                for name, n in loop_state.counts.items():
+                    prior = state.counts.get(name, 0)
+                    if prior < n < 2 and name in state.counts:
+                        findings.append(self.finding(
+                            fc.relpath, st.lineno,
+                            f"key `{name}` consumed inside a loop without "
+                            f"a per-iteration split/fold_in"))
+                state.merge_max(loop_state)
+            elif isinstance(st, (ast.Expr, ast.Return, ast.Raise)):
+                val = getattr(st, "value", None) or getattr(st, "exc", None)
+                self._consume(fc, val, state, findings)
+            elif isinstance(st, ast.With):
+                for item in st.items:
+                    self._consume(fc, item.context_expr, state, findings)
+                self._scan_block(fc, st.body, state, findings, in_loop)
+            elif isinstance(st, ast.Try):
+                self._scan_block(fc, st.body, state, findings, in_loop)
+                for h in st.handlers:
+                    self._scan_block(fc, h.body, state.copy(), findings,
+                                     in_loop)
+                self._scan_block(fc, st.orelse, state, findings, in_loop)
+                self._scan_block(fc, st.finalbody, state, findings, in_loop)
+            elif isinstance(st, ast.AugAssign):
+                self._consume(fc, st.value, state, findings)
