@@ -7,8 +7,12 @@ loops ``schedule_age_noma`` per drop (the pre-engine status quo); the jax
 columns push all drops through one vmapped ``schedule_batch`` call
 (compile excluded — it is amortized over every later sweep).
 
-On CPU the pallas column runs the kernel in interpret mode (correctness
-path, slow by construction); on TPU it is the compiled fused kernel.
+The pallas column requests ``kernel_backend="pallas"``: on hosts with a
+compiled backend (Mosaic/Triton) it times the fused planner kernel; on
+CPU-only hosts it falls back to interpret mode (correctness path, slow by
+construction) and the largest cases record an explicit
+``pallas_skip_reason`` instead of a number — the
+``drops_per_s_jax_pallas`` key is always present, never silently absent.
 
 Writes ``experiments/bench/BENCH_engine_throughput.json`` so CI tracks the
 perf trajectory. ``--smoke`` shrinks sizes for the CI job.
@@ -151,11 +155,24 @@ def bench_case(n, k, drops, *, model_bits=1e6, seed=0, reps=5,
     row["speedup_jax_mc_vs_numpy"] = (row["drops_per_s_jax_mc"]
                                       / row["drops_per_s_numpy_mc"])
 
-    # jax + pallas scoring (interpret mode on CPU -> tiny capped batch)
-    if not skip_pallas:
-        engp = WirelessEngine(ncfg, flcfg, use_pallas=True)
-        pd = (min(drops, pallas_cap)
-              if jax.default_backend() != "tpu" else drops)
+    # jax + pallas scoring: kernel_backend="pallas" resolves to the compiled
+    # backend when the host has one (kernels/backend.py), else the
+    # interpret-mode oracle (slow by construction -> tiny capped batch).
+    # The column is ALWAYS present: a skipped case records None plus an
+    # explicit ``pallas_skip_reason`` and logs the drop, so the regress
+    # gate never sees a silently missing key.
+    engp = WirelessEngine(ncfg, flcfg, kernel_backend="pallas")
+    row["kernel_backend"] = engp.impl     # resolved impl, not the request
+    row["pallas_mode"] = engp.pallas_impl
+    if skip_pallas and engp.impl == "interpret":
+        row["drops_per_s_jax_pallas"] = None
+        row["pallas_skip_reason"] = (
+            f"interpret-mode fallback (no compiled pallas backend on this "
+            f"host) is too slow at n={n}; compiled backends run this case")
+        print(f"engine_throughput: dropping pallas column at n={n} k={k}: "
+              f"{row['pallas_skip_reason']}")
+    else:
+        pd = min(drops, pallas_cap) if engp.impl == "interpret" else drops
         pargs = (gains[:pd], n_samples[:pd], cpu_freq[:pd], ages[:pd],
                  model_bits)
 
@@ -164,7 +181,6 @@ def bench_case(n, k, drops, *, model_bits=1e6, seed=0, reps=5,
 
         run_pallas()
         row["drops_per_s_jax_pallas"] = best_of(run_pallas, pd)
-        row["pallas_mode"] = engp.pallas_impl
 
     row["speedup_jax_vs_numpy"] = (row["drops_per_s_jax"]
                                    / row["drops_per_s_numpy"])
@@ -203,10 +219,11 @@ def run(*, smoke=False, out_path=None, seed=0):
     print(f"{'N':>6} {'K':>5} {'numpy/s':>9} {'jax/s':>9} "
           f"{'jax-mc/s':>9} {'pallas/s':>9} {'batch':>7} {'mc sweep':>9}")
     for r in rows:
+        pall = r["drops_per_s_jax_pallas"]
         print(f"{r['n']:>6} {r['k']:>5} {r['drops_per_s_numpy']:>9.0f} "
               f"{r['drops_per_s_jax']:>9.0f} "
               f"{r['drops_per_s_jax_mc']:>9.0f} "
-              f"{r.get('drops_per_s_jax_pallas', float('nan')):>9.2f} "
+              f"{'skipped' if pall is None else format(pall, '.2f'):>9} "
               f"{r['speedup_jax_vs_numpy']:>6.1f}x "
               f"{r['speedup_jax_mc_vs_numpy']:>8.1f}x")
     print(f"wrote {out_path}")

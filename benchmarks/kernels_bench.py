@@ -71,6 +71,54 @@ def run(*, smoke=False, out_path=None, seed=0):
                  "us_ref_cpu": us_swa,
                  "flops_vs_full": win / s})
 
+    # NOMA pair scoring + fused round-planner tables (kernels/pairscore.py,
+    # kernels/planner.py): xla twin vs pallas-interpret oracle, with
+    # analytic flop/byte counts placing each kernel on the TPU roofline
+    # (launch/roofline.py kernel_roof_point — shape-derived, not timed;
+    # the interpret timings are the CPU correctness path, never gated).
+    from repro.launch.roofline import kernel_roof_point
+    NOMA_KW = dict(n0b=1e-14, pmax=0.2, bw=1e6)
+    PAIR_FLOPS = 25          # sqrt + 2x log1p + div/mul chain per pair
+
+    bq, nq = 64, 256
+    gi = jax.random.uniform(ks[0], (bq, nq), minval=1e-8, maxval=1e-5)
+    gj = jax.random.uniform(ks[1], (bq, nq), minval=1e-9, maxval=1e-6)
+    us_ps_xla = _time(jax.jit(lambda a, b_: ops.pair_alloc_rates(
+        a, b_, impl="xla", **NOMA_KW)), gi, gj, reps=reps)
+    us_ps_int = _time(lambda: ops.pair_alloc_rates(
+        gi, gj, impl="interpret", **NOMA_KW), reps=reps)
+    n_el = bq * nq
+    flops = n_el * PAIR_FLOPS
+    bytes_ = n_el * (2 + 4) * 4          # 2 gain inputs, 4 fp32 outputs
+    rp = kernel_roof_point(flops, bytes_)
+    rows.append({"kernel": "pairscore", "shape": f"{bq}x{nq}",
+                 "us_xla_cpu": us_ps_xla, "us_interpret_cpu": us_ps_int,
+                 "flops": flops, "bytes": bytes_,
+                 "arith_intensity": rp.intensity, "roof_ridge": rp.ridge,
+                 "roof_bound": rp.bound,
+                 "roof_peak_fraction": rp.peak_fraction})
+
+    for bp, cp_ in ((8, 10), (4, 256)):
+        g = -jnp.sort(-jax.random.uniform(ks[2], (bp, cp_), minval=1e-8,
+                                          maxval=1e-5), axis=-1)
+        tc = jax.random.uniform(ks[3], (bp, cp_), minval=0.01, maxval=0.2)
+        us_pl_xla = _time(lambda: ops.planner_tables(
+            g, tc, 1e6, impl="xla", **NOMA_KW), reps=reps)
+        us_pl_int = _time(lambda: ops.planner_tables(
+            g, tc, 1e6, impl="interpret", **NOMA_KW), reps=reps)
+        # c^2 pair-math evals + completion max + row-min/anti-diag reduce
+        flops = bp * cp_ * cp_ * (PAIR_FLOPS + 5)
+        # fp32 gain/t inputs broadcast from (c,), bf16 table out, fp32
+        # row_min out: the fusion's whole point is the O(c) input traffic
+        bytes_ = bp * (2 * cp_ * 4 + cp_ * cp_ * 2 + cp_ * 4 + 4)
+        rp = kernel_roof_point(flops, bytes_)
+        rows.append({"kernel": "planner_tables", "shape": f"{bp}x{cp_}",
+                     "us_xla_cpu": us_pl_xla, "us_interpret_cpu": us_pl_int,
+                     "flops": flops, "bytes": bytes_,
+                     "arith_intensity": rp.intensity,
+                     "roof_ridge": rp.ridge, "roof_bound": rp.bound,
+                     "roof_peak_fraction": rp.peak_fraction})
+
     result = {
         "benchmark": "kernels",
         "backend": jax.default_backend(),

@@ -29,7 +29,7 @@ import sys
 # and never sweep-size knobs like drops/rounds/trials that --smoke shrinks)
 ID_KEYS = ("kernel", "shape", "policy", "predictor", "scenario", "pairing",
            "selection", "mode", "n", "k", "n_clients", "n_cells",
-           "model_mbit")
+           "model_mbit", "kernel_backend")
 
 # gated metric: any numeric row key whose name contains this (higher=better)
 GATE_SUBSTR = "per_s"

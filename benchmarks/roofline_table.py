@@ -1,5 +1,7 @@
 """Assemble the EXPERIMENTS.md roofline table from the dry-run JSON records
-(benchmarks never re-compile; they read experiments/dryrun/)."""
+(benchmarks never re-compile; they read experiments/dryrun/), plus the
+per-kernel roofline placements that kernels_bench.py derives analytically
+(launch/roofline.py kernel_roof_point) and records in BENCH_kernels.json."""
 from __future__ import annotations
 
 import glob
@@ -30,6 +32,28 @@ def fmt_table(recs, mesh_filter="pod_16x16"):
     return "\n".join(lines)
 
 
+def fmt_kernel_table(bench_dir="experiments/bench"):
+    """Per-kernel roofline placements from BENCH_kernels.json (rows that
+    carry the ``roof_*`` keys kernels_bench.py computes via
+    ``kernel_roof_point``). Analytic flop/byte placement on the TPU v5e
+    roofs — independent of the CPU timings in the same rows."""
+    path = os.path.join(bench_dir, "BENCH_kernels.json")
+    lines = ["| kernel | shape | flop/byte | ridge | bound | % of peak |",
+             "|---|---|---|---|---|---|"]
+    if not os.path.exists(path):
+        return "\n".join(lines + ["| (no BENCH_kernels.json) | | | | | |"])
+    with open(path) as f:
+        rows = json.load(f).get("rows", [])
+    for r in rows:
+        if "roof_bound" not in r:
+            continue
+        lines.append(
+            f"| {r['kernel']} | {r['shape']} | {r['arith_intensity']:.2f} | "
+            f"{r['roof_ridge']:.0f} | {r['roof_bound']} | "
+            f"{r['roof_peak_fraction']*100:.2f}% |")
+    return "\n".join(lines)
+
+
 def run(out_dir="experiments/bench", dryrun_dir="experiments/dryrun"):
     recs = load_records(dryrun_dir)
     ok = [r for r in recs if r.get("ok")]
@@ -41,6 +65,13 @@ def run(out_dir="experiments/bench", dryrun_dir="experiments/dryrun"):
         f.write(fmt_table(recs, "pod_16x16"))
         f.write("\n\n## Multi-pod (2x16x16 = 512 chips)\n\n")
         f.write(fmt_table(recs, "multipod_2x16x16"))
+        f.write("\n\n## Kernel roofline placement (TPU v5e roofs, "
+                "analytic)\n\n")
+        f.write("Every planner-path kernel sits far left of the ridge: "
+                "the whole wireless plan is bandwidth-bound, which is why "
+                "the fused planner kernel's win is the O(c) input traffic "
+                "+ bf16 table tiles, not flops (DESIGN.md section 13).\n\n")
+        f.write(fmt_kernel_table(out_dir))
         f.write("\n")
     for r in sorted(ok, key=lambda x: -max(x["t_compute"], x["t_memory"],
                                            x["t_collective"])):

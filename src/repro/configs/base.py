@@ -238,6 +238,15 @@ SELECTIONS = ("greedy_set", "joint")
 # scheduling engines (core/scheduler.py fp64 reference | core/engine.py)
 ENGINES = ("numpy", "jax")
 
+# kernel lowering backends for the jax engine's Pallas kernels
+# (kernels/backend.py resolve_backend; DESIGN.md section 13):
+#   auto            compiled Pallas when the host can lower it (Mosaic on
+#                   TPU, Triton on GPU), else the XLA twin
+#   xla             pure-jnp twin always
+#   pallas          compiled Pallas, interpret fallback on CPU/CI hosts
+#   pallas_interpret interpret mode unconditionally (correctness oracle)
+KERNEL_BACKENDS = ("auto", "xla", "pallas", "pallas_interpret")
+
 # server-side update predictors for unselected clients (fl/predictor.py)
 PREDICTORS = ("none", "stale", "ann")
 
@@ -248,7 +257,6 @@ _POST_INIT_EXEMPT = (
     "scenario",       # registry lives in sim/scenario.py (not import-leaf);
                       # get_scenario_config raises the eager ValueError with
                       # the registered names at resolution
-    "engine_pallas",  # bool toggle: every value is meaningful
     "seed",           # any int is a valid PRNG seed
 )
 
@@ -269,8 +277,14 @@ class FLConfig:
     t_budget_s: float = 0.0          # 0 = no budget (pure min-round-time)
     engine: str = "numpy"            # numpy (fp64 reference) | jax (batched
                                      # core.engine path for the age policies)
-    engine_pallas: bool = False      # jax engine: score rates with the
-                                     # kernels/pairscore.py Pallas kernel
+    engine_pallas: bool = False      # DEPRECATED alias for
+                                     # kernel_backend="pallas"; kept as a
+                                     # back-compat shim (__post_init__ maps
+                                     # it, contradictions raise)
+    # kernel lowering backend for the jax engine's Pallas kernels
+    # (KERNEL_BACKENDS above; kernels/backend.py resolves it against the
+    # host's actual lowering capability at engine construction)
+    kernel_backend: str = "auto"
     # subchannel pairing policy (core/pairing.py, DESIGN.md section 7):
     #   strong_weak     i-th strongest with i-th weakest (paper heuristic)
     #   adjacent        neighbouring sorted gains (NOMA worst-case ablation)
@@ -336,6 +350,7 @@ class FLConfig:
                                 ("selection", SELECTIONS),
                                 ("admission", ADMISSIONS),
                                 ("cell_layout", CELL_LAYOUTS),
+                                ("kernel_backend", KERNEL_BACKENDS),
                                 ("predictor", PREDICTORS)):
             value = getattr(self, field)
             if value not in registry:
@@ -370,6 +385,16 @@ class FLConfig:
                              f"0 < min <= max, got {(flo, fhi)}")
         if self.n_cells < 1:
             raise ValueError(f"n_cells must be >= 1, got {self.n_cells}")
+        # engine_pallas back-compat shim: the old bool maps onto the
+        # kernel_backend axis; contradictory combinations fail eagerly.
+        if self.engine_pallas:
+            if self.kernel_backend == "auto":
+                object.__setattr__(self, "kernel_backend", "pallas")
+            elif self.kernel_backend == "xla":
+                raise ValueError(
+                    "engine_pallas=True contradicts kernel_backend='xla'; "
+                    "drop the deprecated engine_pallas flag and set "
+                    "kernel_backend alone")
 
 
 # ---------------------------------------------------------------------------

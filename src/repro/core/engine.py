@@ -60,7 +60,8 @@ from repro.core.plan import (
     enumerate_subsets,
     resolve_admission,
 )
-from repro.kernels import pairscore
+from repro.kernels import pairscore, planner
+from repro.kernels.backend import resolve_backend
 from repro.obs import trace
 from repro.obs.metrics import AOU_BUCKET_EDGES
 
@@ -325,14 +326,16 @@ def _lex_rank_desc(sorted_keys, sorted_idx, keys, idx):
 
 
 def _completion_table(g_sorted, t_cmp_sorted, model_bits, prm: EngineParams,
-                      oma: bool):
+                      oma: bool, impl: str = "xla"):
     """``pairscore.completion_table`` with the engine's static params —
     the ONE rate-table construction shared by the fast path's matching
     solve, the budget core, and the joint admission search (rate-table
-    reuse; numpy twin: ``pairing.completion_table``)."""
+    reuse; numpy twin: ``pairing.completion_table``). Non-xla ``impl``
+    routes to the fused planner kernel's bf16 tiles upcast to fp32
+    (DESIGN.md section 13)."""
     return pairscore.completion_table(
         g_sorted, t_cmp_sorted, model_bits, n0b=prm.noise_power_w,
-        pmax=prm.max_power_w, bw=prm.bandwidth_hz, oma=oma)
+        pmax=prm.max_power_w, bw=prm.bandwidth_hz, oma=oma, impl=impl)
 
 
 def _sw_completion(mask, gains, t_cmp, model_bits, prm: EngineParams,
@@ -621,11 +624,19 @@ def _admit_fast_seg(priority, gains, n_cand0: int):
 
 def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
                  prm: EngineParams, oma: bool, n_pairs: int,
-                 n_cand0: int, pairing_policy: str = "strong_weak"
-                 ) -> EngineSchedule:
+                 n_cand0: int, pairing_policy: str = "strong_weak",
+                 impl: str = "xla") -> EngineSchedule:
     """Stages 3-5 for a static-count admission mask ``cand``: compaction,
     pairing under the policy, power/rates, round time, client-space
-    gathers."""
+    gathers.
+
+    ``impl`` (static, kernels/backend.py axis) routes the scoring and the
+    matching policies' completion table through the Pallas kernels: pair
+    power/rate scoring via ``pairscore.pairscore_pallas`` and the table +
+    strong_weak bottleneck via the fused planner kernel
+    (``kernels/planner.py``) — replacing the post-hoc rescore pass the
+    engine used before. ``"xla"`` is the pure-jnp twin, bit-identical to
+    the previous behavior."""
     b, n = gains.shape
     n0b, pmax, bw = prm.noise_power_w, prm.max_power_w, prm.bandwidth_hz
     c = n_cand0
@@ -702,8 +713,8 @@ def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
     if pairing_policy == "strong_weak" or m == 0:
         g_str = sg_c[:, :m]
         g_wk = jnp.flip(sg_c[:, m:c_pair], axis=1)
-        p_i, p_j, r_i, r_j = pairscore._pair_math(g_str, g_wk, n0b=n0b,
-                                                  pmax=pmax, bw=bw, oma=oma)
+        p_i, p_j, r_i, r_j = pairscore.pair_alloc_rates(
+            g_str, g_wk, n0b=n0b, pmax=pmax, bw=bw, oma=oma, impl=impl)
         rate_srt = jnp.concatenate([r_i, jnp.flip(r_j, axis=1)], axis=1)
         pow_srt = jnp.concatenate([p_i, jnp.flip(p_j, axis=1)], axis=1)
         strong_tab = sid_c[:, :m]
@@ -711,8 +722,8 @@ def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
     elif pairing_policy == "adjacent":
         g_str = sg_c[:, 0:c_pair:2]
         g_wk = sg_c[:, 1:c_pair:2]
-        p_i, p_j, r_i, r_j = pairscore._pair_math(g_str, g_wk, n0b=n0b,
-                                                  pmax=pmax, bw=bw, oma=oma)
+        p_i, p_j, r_i, r_j = pairscore.pair_alloc_rates(
+            g_str, g_wk, n0b=n0b, pmax=pmax, bw=bw, oma=oma, impl=impl)
         rate_srt = jnp.stack([r_i, r_j], axis=-1).reshape(b, c_pair)
         pow_srt = jnp.stack([p_i, p_j], axis=-1).reshape(b, c_pair)
         strong_tab = sid_c[:, 0:c_pair:2]
@@ -729,11 +740,21 @@ def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
         else:
             # full sorted-rank completion table: the [0:m, m:] half-split
             # slice is the assignment cost, the whole table feeds the
-            # bottleneck 2-opt + the never-slower guard (DESIGN.md 7.2)
+            # bottleneck 2-opt + the never-slower guard (DESIGN.md 7.2).
+            # Non-xla impls get the fused planner kernel's bf16 tiles
+            # (upcast fp32) plus the in-kernel fp32 strong_weak bottleneck
+            # t_sw, saving the separate guard gather/reduction pass.
             t_cmp_srt = jnp.take_along_axis(t_cmp, sid_c, axis=1)
-            table = _completion_table(sg_c[:, :c_pair],
-                                      t_cmp_srt[:, :c_pair], model_bits,
-                                      prm, oma)
+            if impl == "xla":
+                table = _completion_table(sg_c[:, :c_pair],
+                                          t_cmp_srt[:, :c_pair], model_bits,
+                                          prm, oma)
+                t_sw = None
+            else:
+                table_t, _, t_sw = planner.planner_tables(
+                    sg_c[:, :c_pair], t_cmp_srt[:, :c_pair], model_bits,
+                    n0b=n0b, pmax=pmax, bw=bw, oma=oma, impl=impl)
+                table = table_t.astype(jnp.float32)
             rev = jnp.broadcast_to(
                 jnp.arange(c_pair - 1, m - 1, -1, dtype=jnp.int32), (b, m))
             if m <= ENUM_MAX_PAIRS:
@@ -752,15 +773,18 @@ def _fast_finish(cand, gains, t_cmp, n_samples, model_bits,
                 a_p, b_p = matching.best_bottleneck_matching(
                     table, ((ar_m, m + sigma), (ar_m, rev),
                             (adj, adj + 1)))
-            # never-slower guard vs strong_weak
+            # never-slower guard vs strong_weak (fp32 threshold math: the
+            # fused kernel reduces t_sw from the pre-bf16 fp32 values)
+            sw_bneck = (matching.pair_bottleneck(table, ar_m, rev)
+                        if t_sw is None else t_sw)
             use = (matching.pair_bottleneck(table, a_p, b_p)
-                   < matching.pair_bottleneck(table, ar_m, rev))[:, None]
+                   < sw_bneck)[:, None]
             strong_pos = jnp.where(use, a_p, ar_m)
             weak_pos = jnp.where(use, b_p, rev)
         g_str = jnp.take_along_axis(sg_c, strong_pos, axis=1)
         g_wk = jnp.take_along_axis(sg_c, weak_pos, axis=1)
-        p_i, p_j, r_i, r_j = pairscore._pair_math(g_str, g_wk, n0b=n0b,
-                                                  pmax=pmax, bw=bw, oma=oma)
+        p_i, p_j, r_i, r_j = pairscore.pair_alloc_rates(
+            g_str, g_wk, n0b=n0b, pmax=pmax, bw=bw, oma=oma, impl=impl)
         # sorted-space inverse of [strong_pos | weak_pos] (a permutation of
         # 0..c_pair-1): one short bitonic argsort ascending
         pos = jnp.concatenate([strong_pos, weak_pos], axis=1)
@@ -826,24 +850,29 @@ def _fast_schedule_batch(priority, gains, t_cmp, n_samples, model_bits,
                          prm: EngineParams, oma: bool, n_pairs: int,
                          n_cand0: int, pairing_policy: str = "strong_weak",
                          selection: str = "greedy_set",
-                         admission: str = "full_sort") -> EngineSchedule:
+                         admission: str = "full_sort",
+                         impl: str = "xla") -> EngineSchedule:
     """Staged fast path: greedy admission -> finish; ``selection="joint"``
     additionally refines the admitted set (``_joint_refine_mask``) and
     keeps the refined schedule only where strictly faster (the plan.py
     never-worse guard, realized under the active pairing policy).
     ``admission`` picks the resolved stage-2 implementation ("full_sort" |
-    "segmented" — same mask bit-for-bit, DESIGN.md section 9)."""
+    "segmented" — same mask bit-for-bit, DESIGN.md section 9). ``impl``
+    routes the finish stage's scoring/table through the Pallas kernels
+    (the joint refine's set-search stages stay XLA: their tables are
+    c <= 8 wide and padding them to 128-lane tiles measured out ~100x
+    wasteful — DESIGN.md section 13)."""
     seg = admission == "segmented"
     admit = _admit_fast_seg if seg else _admit_fast
     cand = admit(priority, gains, n_cand0)
     out = _fast_finish(cand, gains, t_cmp, n_samples, model_bits, prm, oma,
-                       n_pairs, n_cand0, pairing_policy)
+                       n_pairs, n_cand0, pairing_policy, impl)
     if selection == "joint" and 0 < n_cand0 < gains.shape[-1]:
         refined = _joint_refine_mask(cand, gains, t_cmp, model_bits, prm,
                                      oma, n_cand0, segmented=seg)
         out = _pick_faster(
             _fast_finish(refined, gains, t_cmp, n_samples, model_bits, prm,
-                         oma, n_pairs, n_cand0, pairing_policy), out)
+                         oma, n_pairs, n_cand0, pairing_policy, impl), out)
     return out
 
 
@@ -873,16 +902,18 @@ def _scan_subchunks(step, arrays, b: int, sub: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("prm", "oma", "n_pairs", "n_cand0",
-                                    "pairing", "selection", "admission"))
+                                    "pairing", "selection", "admission",
+                                    "impl"))
 def _fast_schedule_batch_core(priority, gains, t_cmp, n_samples, model_bits,
                               *, prm: EngineParams, oma: bool, n_pairs: int,
                               n_cand0: int, pairing: str = "strong_weak",
                               selection: str = "greedy_set",
-                              admission: str = "full_sort"
-                              ) -> EngineSchedule:
+                              admission: str = "full_sort",
+                              impl: str = "xla") -> EngineSchedule:
     def step(p, g, tc, ns, mb):
         return _fast_schedule_batch(p, g, tc, ns, mb, prm, oma, n_pairs,
-                                    n_cand0, pairing, selection, admission)
+                                    n_cand0, pairing, selection, admission,
+                                    impl)
 
     b, n = gains.shape
     sub = _seg_subchunk(b, n) if admission == "segmented" else 0
@@ -925,13 +956,14 @@ def _compute_times(prm: EngineParams, n_samples, cpu_freq):
 @functools.partial(jax.jit, static_argnames=("prm", "gamma", "oma",
                                              "n_pairs", "n_cand0",
                                              "pairing", "selection",
-                                             "admission"))
+                                             "admission", "impl"))
 def _fast_from_env_core(gains, n_samples, cpu_freq, ages, model_bits, *,
                         prm: EngineParams, gamma: float, oma: bool,
                         n_pairs: int, n_cand0: int,
                         pairing: str = "strong_weak",
                         selection: str = "greedy_set",
-                        admission: str = "full_sort") -> EngineSchedule:
+                        admission: str = "full_sort",
+                        impl: str = "xla") -> EngineSchedule:
     """Age-priority preamble fused with the fast path: one dispatch per
     batch (the eager preamble otherwise costs several ms on CPU). On the
     segmented path the preamble rides inside the cache-blocked sub-chunk
@@ -941,7 +973,7 @@ def _fast_from_env_core(gains, n_samples, cpu_freq, ages, model_bits, *,
         t_cmp = _compute_times(prm, ns, cf)
         return _fast_schedule_batch(priority, g, t_cmp, ns, mb, prm, oma,
                                     n_pairs, n_cand0, pairing, selection,
-                                    admission)
+                                    admission, impl)
 
     b, n = gains.shape
     sub = _seg_subchunk(b, n) if admission == "segmented" else 0
@@ -1206,8 +1238,8 @@ def _cell_member_table(cell, n_cells: int, cap: int):
 def _multicell_schedule(priority, gains, t_cmp, n_samples, model_bits,
                         t_budget, cell, *, prm: EngineParams, oma: bool,
                         pairing: str, selection: str, admission: str,
-                        n_cells: int, cap: int,
-                        budget: bool) -> EngineSchedule:
+                        n_cells: int, cap: int, budget: bool,
+                        impl: str = "xla") -> EngineSchedule:
     """Cell-partitioned planner: gather each cell's (<= cap) members into
     a compact (B*C, cap) sub-batch, run the EXISTING per-cell pipeline —
     the fast path (with the segmented admission's cache-blocked scan) or
@@ -1246,7 +1278,7 @@ def _multicell_schedule(priority, gains, t_cmp, n_samples, model_bits,
         def step(p, g, tc, ns, mbx):
             return _fast_schedule_batch(p, g, tc, ns, mbx, prm, oma,
                                         n_pairs, n_cand0, pairing,
-                                        selection, admission)
+                                        selection, admission, impl)
 
         rows = b * n_cells
         subc = _seg_subchunk(rows, cap) if admission == "segmented" else 0
@@ -1308,24 +1340,31 @@ def _merge_cells(sub: EngineSchedule, tbl, valid, t_cmp, n_samples,
 @functools.partial(jax.jit,
                    static_argnames=("prm", "oma", "pairing", "selection",
                                     "admission", "n_cells", "cap",
-                                    "budget"))
+                                    "budget", "impl"))
 def _multicell_schedule_core(priority, gains, t_cmp, n_samples, model_bits,
                              t_budget, cell, *, prm: EngineParams,
                              oma: bool, pairing: str, selection: str,
                              admission: str, n_cells: int, cap: int,
-                             budget: bool) -> EngineSchedule:
+                             budget: bool, impl: str = "xla"
+                             ) -> EngineSchedule:
     return _multicell_schedule(priority, gains, t_cmp, n_samples,
                                model_bits, t_budget, cell, prm=prm, oma=oma,
                                pairing=pairing, selection=selection,
                                admission=admission, n_cells=n_cells,
-                               cap=cap, budget=budget)
+                               cap=cap, budget=budget, impl=impl)
 
 
 def _rescore_pallas(out: EngineSchedule, gains, model_bits, oma: bool,
                     prm: EngineParams, impl: str) -> EngineSchedule:
     """Recompute rates/powers/times from the pair tables with the fused
     Pallas kernel (same math as the XLA twin used inside the cores).
-    Module-level so the Monte-Carlo step can trace it too."""
+    Module-level so the Monte-Carlo step can trace it too.
+
+    Only the BUDGET (eviction-loop) paths still use this post-hoc pass:
+    their candidate scoring lives inside a vmapped ``lax.while_loop``
+    where a per-iteration kernel launch measured slower than one rescore
+    at the end. The fast paths score in-path via ``_fast_finish(impl=)``
+    instead (DESIGN.md section 13)."""
     b, n = gains.shape
     strong, weak = out.pair_strong, out.pair_weak
     pair_valid = weak >= 0
@@ -1364,12 +1403,21 @@ def _rescore_pallas(out: EngineSchedule, gains, model_bits, oma: bool,
 class WirelessEngine:
     """Batched scheduler with the numpy implementation's semantics.
 
-    ``use_pallas`` routes the final candidate-rate scoring through the
-    fused ``kernels/pairscore.py`` kernel (interpreted on CPU, compiled on
-    TPU); selection and the eviction loop always run in XLA.
+    ``kernel_backend`` (default: ``FLConfig.kernel_backend``) picks the
+    kernel lowering path (``kernels/backend.py``): ``auto`` compiles the
+    Pallas kernels where the host can (Mosaic/Triton) and otherwise uses
+    the XLA twins; ``pallas`` forces the kernel path (interpret fallback
+    on CPU); ``pallas_interpret`` forces interpret mode. The fast path
+    scores and builds its completion table in-kernel (``_fast_finish``);
+    selection and the eviction loop always run in XLA.
+
+    ``use_pallas``/``pallas_impl`` are the deprecated pre-backend spelling
+    and map onto ``kernel_backend`` (use_pallas=True == "pallas";
+    pallas_impl="interpret" == "pallas_interpret").
     """
 
     def __init__(self, ncfg: NOMAConfig, flcfg: FLConfig, *,
+                 kernel_backend: Optional[str] = None,
                  use_pallas: bool = False,
                  pallas_impl: Optional[str] = None,
                  pairing: Optional[str] = None,
@@ -1392,11 +1440,26 @@ class WirelessEngine:
         if self.admission not in ADMISSIONS:
             raise ValueError(f"unknown admission mode {self.admission!r} "
                              f"(expected one of {ADMISSIONS})")
-        self.use_pallas = use_pallas
-        if pallas_impl is None:
-            pallas_impl = ("pallas" if jax.default_backend() == "tpu"
-                           else "interpret")
-        self.pallas_impl = pallas_impl
+        if kernel_backend is None:
+            if use_pallas:
+                # deprecated-arg mapping: the old default resolution
+                # ("pallas" on TPU, "interpret" elsewhere) is exactly what
+                # resolve_backend("pallas") does
+                kernel_backend = {None: "pallas", "pallas": "pallas",
+                                  "interpret": "pallas_interpret",
+                                  "xla": "xla"}.get(pallas_impl)
+                if kernel_backend is None:
+                    raise ValueError(
+                        f"unknown pallas_impl {pallas_impl!r} "
+                        f"(expected one of ('xla', 'pallas', 'interpret'))")
+            else:
+                kernel_backend = flcfg.kernel_backend
+        self.backend = resolve_backend(kernel_backend)
+        self.kernel_backend = self.backend.requested
+        self.impl = self.backend.impl
+        self.use_pallas = self.backend.uses_pallas
+        # deprecated alias some callers (benchmarks) still read
+        self.pallas_impl = self.impl if self.use_pallas else None
 
     # -- env building ------------------------------------------------------
 
@@ -1474,7 +1537,7 @@ class WirelessEngine:
                admission or self.admission,
                (self.flcfg.n_cells if n_cells is None else n_cells)
                if cell is not None else 1,
-               priority is None, self.use_pallas)
+               priority is None, self.impl)
         with trace.span("engine.schedule_batch", b=b, n=n,
                         cold=trace.cold(sig)) as sp:
             out = self._schedule_batch_impl(
@@ -1541,8 +1604,11 @@ class WirelessEngine:
                 n_samples, model_bits, tb,
                 jnp.asarray(cell, jnp.int32), prm=self.prm, oma=oma,
                 pairing=pairing, selection=selection, admission=adm,
-                n_cells=n_cells, cap=cap, budget=not no_budget)
-            if self.use_pallas:
+                n_cells=n_cells, cap=cap, budget=not no_budget,
+                impl=self.impl)
+            if self.use_pallas and not no_budget:
+                # fast cells already scored in-kernel; the budget cells'
+                # eviction loop is XLA and gets the post-hoc rescore
                 out = self._rescore(out, gains, model_bits, oma)
             return out
         admission = resolve_admission(
@@ -1553,7 +1619,7 @@ class WirelessEngine:
                 gains, n_samples, jnp.asarray(cpu_freq, jnp.float32), ages,
                 model_bits, prm=self.prm, gamma=self.flcfg.age_exponent,
                 oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing,
-                selection=selection, admission=admission)
+                selection=selection, admission=admission, impl=self.impl)
         elif no_budget:
             priority = jnp.asarray(priority, jnp.float32)
             t_cmp = self.compute_times(n_samples,
@@ -1561,7 +1627,7 @@ class WirelessEngine:
             out = _fast_schedule_batch_core(
                 priority, gains, t_cmp, n_samples, model_bits, prm=self.prm,
                 oma=oma, n_pairs=n_pairs, n_cand0=n_cand0, pairing=pairing,
-                selection=selection, admission=admission)
+                selection=selection, admission=admission, impl=self.impl)
         else:
             if priority is None:
                 priority = self.age_priority(ages, n_samples, gains)
@@ -1574,8 +1640,8 @@ class WirelessEngine:
                 priority, gains, t_cmp, n_samples, model_bits, t_budget,
                 prm=self.prm, oma=oma, n_pairs=n_pairs, n_cand0=n_cand0,
                 pairing=pairing, selection=selection)
-        if self.use_pallas:
-            out = self._rescore(out, gains, model_bits, oma)
+            if self.use_pallas:
+                out = self._rescore(out, gains, model_bits, oma)
         return out
 
     def _rescore(self, out: EngineSchedule, gains, model_bits,
@@ -1763,9 +1829,7 @@ class WirelessEngine:
                     t_budget=float(t_budget), n_pairs=n_pairs,
                     n_cand0=n_cand0,
                     pairing=pairing, selection=selection,
-                    admission=admission,
-                    pallas_impl=self.pallas_impl if self.use_pallas
-                    else None,
+                    admission=admission, impl=self.impl,
                     n_cells=n_cells if multicell else 1, cap=cap)
                 t_rounds.append(t_round)
                 n_sels.append(n_sel)
@@ -1799,7 +1863,7 @@ class WirelessEngine:
                                              "t_budget", "n_pairs",
                                              "n_cand0", "pairing",
                                              "selection", "admission",
-                                             "pallas_impl", "n_cells",
+                                             "impl", "n_cells",
                                              "cap"))
 def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
                      model_bits, round_idx, cell=None, *,
@@ -1809,7 +1873,7 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
                      pairing: str = "strong_weak",
                      selection: str = "greedy_set",
                      admission: str = "full_sort",
-                     pallas_impl: Optional[str] = None,
+                     impl: str = "xla",
                      n_cells: int = 1, cap: int = 0):
     """One Monte-Carlo round over all seeds; every policy in
     ``fl.rounds.POLICIES`` resolves to a priority vector here
@@ -1817,7 +1881,9 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
     ``t_budget``). ``round_idx`` is traced so the round-robin window can
     advance without recompiling. A non-None ``cell`` with ``n_cells > 1``
     routes through the cell-partitioned planner (``n_cand0``/``n_pairs``
-    are then the per-cell values for capacity ``cap``)."""
+    are then the per-cell values for capacity ``cap``). ``impl`` routes
+    the fast paths' scoring in-kernel; the budget path rescores post-hoc
+    (see ``_rescore_pallas``)."""
     s, n = gains.shape
     oma = policy == "oma_age"
     t_cmp = _compute_times(prm, n_samples, cpu_freq)
@@ -1838,12 +1904,14 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
         sched = _multicell_schedule(
             prio, gains, t_cmp, n_samples, mb, tb, cell, prm=prm, oma=oma,
             pairing=pairing, selection=selection, admission=admission,
-            n_cells=n_cells, cap=cap, budget=t_budget > 0.0)
+            n_cells=n_cells, cap=cap, budget=t_budget > 0.0, impl=impl)
+        if t_budget > 0.0 and impl != "xla":
+            sched = _rescore_pallas(sched, gains, mb, oma, prm, impl)
     elif t_budget <= 0.0:
         def step(p, g, tc, ns, mbx):
             return _fast_schedule_batch(p, g, tc, ns, mbx, prm, oma,
                                         n_pairs, n_cand0, pairing,
-                                        selection, admission)
+                                        selection, admission, impl)
 
         sub = _seg_subchunk(s, n) if admission == "segmented" else 0
         if sub:
@@ -1857,8 +1925,8 @@ def _montecarlo_step(ages, part, gains, key, n_samples, cpu_freq,
                                 n_pairs=n_pairs, n_cand0=n_cand0,
                                 pairing=pairing, selection=selection)
         sched = jax.vmap(one)(prio, gains, t_cmp, n_samples, mb, tb)
-    if pallas_impl is not None:
-        sched = _rescore_pallas(sched, gains, mb, oma, prm, pallas_impl)
+        if impl != "xla":
+            sched = _rescore_pallas(sched, gains, mb, oma, prm, impl)
     sel = sched.selected
     ages2 = jnp.where(sel, 1.0, ages + 1.0)
     diag = schedule_diag(sched, ages2)

@@ -66,6 +66,7 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
                    policies=MC_POLICIES, model_bits: float = 1e6,
                    t_budget: float = 0.0, seed: int = 0,
                    use_pallas: bool = False,
+                   kernel_backend: Optional[str] = None,
                    scenario: str | object = "static_iid",
                    presampled: bool = False, shard: bool = False,
                    pairing: Optional[str] = None,
@@ -118,9 +119,9 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
     # selection, admission) combination (core/pairing.py, core/plan.py;
     # threaded through the fused MC step — an unknown admission value
     # raises in the engine constructor, never a silent fallback)
-    eng = WirelessEngine(nomacfg, flcfg, use_pallas=use_pallas,
-                         pairing=pairing, selection=selection,
-                         admission=admission)
+    eng = WirelessEngine(nomacfg, flcfg, kernel_backend=kernel_backend,
+                         use_pallas=use_pallas, pairing=pairing,
+                         selection=selection, admission=admission)
     scn = as_scenario(scenario, nomacfg, flcfg)
     s, n, r = n_seeds, n_clients, rounds
     k_env = jax.random.PRNGKey(seed)
@@ -144,6 +145,8 @@ def run_montecarlo(nomacfg: Optional[NOMAConfig] = None,
         "model_bits": model_bits, "t_budget": t_budget,
         "scenario": scn.name, "presampled": bool(presampled),
         "slots": eng.prm.slots, "use_pallas": use_pallas,
+        "kernel_backend": eng.kernel_backend,
+        "kernel_impl": eng.impl,
         "pairing": eng.pairing, "selection": eng.selection,
         "admission": eng.admission,
         "n_cells": flcfg.n_cells, "cell_layout": flcfg.cell_layout}}

@@ -129,7 +129,7 @@ class FLServer:
             raise ValueError(f"unknown engine {self.engine_mode!r} "
                              "(expected 'numpy' or 'jax')")
         self.engine = (WirelessEngine(nomacfg, fl,
-                                      use_pallas=fl.engine_pallas,
+                                      kernel_backend=fl.kernel_backend,
                                       pairing=fl.pairing)
                        if self.engine_mode == "jax" else None)
         seed = fl.seed if seed is None else seed

@@ -1,11 +1,16 @@
 """Jit'd dispatch wrappers for the Pallas kernels.
 
-``impl``:
+``impl`` (validated by ``kernels.backend.resolve_impl`` — the ONE resolver
+shared with backend detection; unknown strings raise eagerly instead of
+falling through to the Pallas branch):
   "xla"      pure-jnp implementation (default on CPU; what the dry-run and
              the FL runtime use on this container)
   "pallas"   the TPU kernel (compiled for TPU targets)
   "interpret" the TPU kernel executed by the Pallas interpreter on CPU —
              used by the correctness tests to validate the kernel body.
+
+Engine callers resolve ``FLConfig.kernel_backend`` to an impl string once
+at construction via ``kernels.backend.resolve_backend``.
 """
 from __future__ import annotations
 
@@ -14,9 +19,11 @@ import jax.numpy as jnp
 
 from repro.kernels import fedagg as _fedagg
 from repro.kernels import pairscore as _pairscore
+from repro.kernels import planner as _planner
 from repro.kernels import ref as _ref
 from repro.kernels import swa as _swa
 from repro.kernels import wkv6 as _wkv6
+from repro.kernels.backend import resolve_impl
 
 
 def _pad_to(x, axis, multiple):
@@ -34,7 +41,7 @@ def weighted_sum(stacked, weights, *, impl: str = "xla",
     """stacked (C, *shape); weights (C,) -> (*shape,) fp32 weighted sum."""
     c = stacked.shape[0]
     flat = stacked.reshape(c, -1)
-    if impl == "xla":
+    if resolve_impl(impl) == "xla":
         out = _ref.weighted_sum_ref(flat, weights)
     else:
         n = flat.shape[1]
@@ -82,13 +89,25 @@ def completion_table(g_sorted, t_cmp_sorted, model_bits, *, n0b: float,
                                        impl=impl)
 
 
+def planner_tables(g_sorted, t_cmp_sorted, model_bits, *, n0b: float,
+                   pmax: float, bw: float, oma: bool = False,
+                   impl: str = "xla"):
+    """Fused round-planner tables (kernels/planner.py): one pass from
+    gain-pairs -> ``_pair_math`` scores -> per-row admission contribution
+    -> completion-table tiles. Returns ``(table, row_min, t_sw)``; the
+    non-xla table is bf16 (DESIGN.md section 13), reductions fp32."""
+    return _planner.planner_tables(g_sorted, t_cmp_sorted, model_bits,
+                                   n0b=n0b, pmax=pmax, bw=bw, oma=oma,
+                                   impl=impl)
+
+
 def wkv6(r, k, v, w_log, u, s0=None, *, impl: str = "xla", chunk: int = 64):
     """Chunked RWKV6. Returns (out (B,H,T,C) fp32, s_T). The Pallas path
     currently supports zero initial state (training segments)."""
     b, h, t, c = r.shape
     if s0 is None:
         s0 = jnp.zeros((b, h, c, c), jnp.float32)
-    if impl == "xla":
+    if resolve_impl(impl) == "xla":
         return _ref.wkv6_ref(r, k, v, w_log, u, s0)
     out = _wkv6.wkv6_pallas(r, k, v, w_log, u, chunk=chunk,
                             interpret=(impl == "interpret"))
@@ -102,7 +121,7 @@ def wkv6(r, k, v, w_log, u, s0=None, *, impl: str = "xla", chunk: int = 64):
 def swa(q, k, v, *, window: int, impl: str = "xla", softcap: float = 0.0,
         bq: int = 256, bk: int = 256):
     """Sliding-window attention."""
-    if impl == "xla":
+    if resolve_impl(impl) == "xla":
         return _ref.swa_ref(q, k, v, window)
     return _swa.swa_pallas(q, k, v, window=window, bq=bq, bk=bk,
                            softcap=softcap,

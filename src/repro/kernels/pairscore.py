@@ -125,8 +125,10 @@ def pairscore_pallas(g_i, g_j, *, n0b: float, pmax: float, bw: float,
 
 def pair_alloc_rates(g_i, g_j, *, n0b: float, pmax: float, bw: float,
                      oma: bool = False, impl: str = "xla"):
-    """Dispatch: ``impl`` in {"xla", "pallas", "interpret"} (ops.py idiom)."""
-    if impl == "xla":
+    """Dispatch: ``impl`` in {"xla", "pallas", "interpret"} (ops.py idiom);
+    eager ValueError on anything else via the shared resolver."""
+    from repro.kernels.backend import resolve_impl
+    if resolve_impl(impl) == "xla":
         return _pair_math(jnp.asarray(g_i, jnp.float32),
                           jnp.asarray(g_j, jnp.float32),
                           n0b=n0b, pmax=pmax, bw=bw, oma=oma)
@@ -143,6 +145,8 @@ def pair_rate_tables(g_strong, g_weak, *, n0b: float, pmax: float,
     ``g_strong`` (..., K) and ``g_weak`` (..., N) batch over any shared
     leading dims. Feeds the matching-based pairing policies' completion
     -time cost tables (core/pairing.py, core/matching.py)."""
+    from repro.kernels.backend import resolve_impl
+    resolve_impl(impl)
     g_strong = jnp.asarray(g_strong)
     g_weak = jnp.asarray(g_weak)
     k = g_strong.shape[-1]
@@ -163,7 +167,18 @@ def completion_table(g_sorted, t_cmp_sorted, model_bits, *, n0b: float,
     strong, rank q weak, under closed-form max-min power. Built on ONE
     ``pair_rate_tables`` call — the shared matching/search surface of the
     round planner (numpy twin: ``pairing.completion_table``; DESIGN.md
-    8.3). ``model_bits`` broadcasts over the leading batch dims."""
+    8.3). ``model_bits`` broadcasts over the leading batch dims.
+
+    Non-xla impls route to the fused planner kernel (kernels/planner.py)
+    and return its bf16 tiles upcast to fp32 — the mixed-precision
+    contract of DESIGN.md section 13."""
+    from repro.kernels.backend import resolve_impl
+    if resolve_impl(impl) != "xla":
+        from repro.kernels import planner
+        table, _, _ = planner.planner_tables(
+            g_sorted, t_cmp_sorted, model_bits, n0b=n0b, pmax=pmax, bw=bw,
+            oma=oma, impl=impl)
+        return table.astype(jnp.float32)
     r_i, r_j = pair_rate_tables(g_sorted, g_sorted, n0b=n0b, pmax=pmax,
                                 bw=bw, oma=oma, impl=impl)
     mb = jnp.asarray(model_bits)[..., None, None]

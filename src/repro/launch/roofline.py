@@ -185,6 +185,42 @@ def collective_stats(hlo: str) -> CollectiveStats:
 
 
 # ---------------------------------------------------------------------------
+# single-kernel roofline placement
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RoofPoint:
+    """Placement of ONE kernel on the chip roofline: where its analytic
+    arithmetic intensity (flop/byte) falls relative to the ridge point
+    ``PEAK_FLOPS / HBM_BW`` and what fraction of peak the roof allows
+    there. Shape-derived, not timed — the kernels_bench rows carry it so
+    the roofline table can say WHY a kernel is bandwidth-bound."""
+    flops: float
+    bytes: float
+    intensity: float         # flop / byte
+    ridge: float             # PEAK_FLOPS / HBM_BW (flop/byte)
+    bound: str               # "memory" when intensity < ridge else "compute"
+    peak_fraction: float     # attainable FLOP/s at this intensity / peak
+    t_compute: float         # seconds at peak compute
+    t_memory: float          # seconds at peak HBM bandwidth
+
+
+def kernel_roof_point(flops: float, bytes_: float, *,
+                      peak_flops: float = PEAK_FLOPS,
+                      hbm_bw: float = HBM_BW) -> RoofPoint:
+    """Place a kernel with analytic ``flops``/``bytes_`` on the roofline."""
+    intensity = flops / max(bytes_, 1.0)
+    ridge = peak_flops / hbm_bw
+    attainable = min(peak_flops, intensity * hbm_bw)
+    return RoofPoint(
+        flops=float(flops), bytes=float(bytes_), intensity=intensity,
+        ridge=ridge, bound="memory" if intensity < ridge else "compute",
+        peak_fraction=attainable / peak_flops,
+        t_compute=flops / peak_flops, t_memory=bytes_ / hbm_bw)
+
+
+# ---------------------------------------------------------------------------
 # roofline assembly
 # ---------------------------------------------------------------------------
 

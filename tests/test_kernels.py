@@ -122,6 +122,94 @@ class TestPairScore:
         np.testing.assert_allclose(np.asarray(krj), r_j, rtol=1e-5)
 
 
+class TestPlannerTables:
+    """Fused planner kernel (kernels/planner.py) vs its XLA twin and the
+    fp64 pairing reference — the mixed-precision contract of DESIGN.md
+    section 13: bf16 table tiles (rtol ~1e-2), fp32 reductions
+    (row_min/t_sw, rtol ~1e-6)."""
+
+    KW = dict(n0b=1e-14, pmax=0.2, bw=1e6)
+
+    def _cands(self, seed, b, c):
+        rng = np.random.default_rng(seed)
+        g = np.sort(rng.uniform(1e-14, 1e-10, (b, c)), axis=-1)[:, ::-1]
+        tc = rng.uniform(0.05, 0.5, (b, c))
+        return g.astype(np.float32).copy(), tc.astype(np.float32)
+
+    @pytest.mark.parametrize("oma", [False, True])
+    @pytest.mark.parametrize("c", [1, 2, 3, 7, 10, 129, 256])
+    def test_fused_matches_xla_twin_tile_boundaries(self, c, oma):
+        """Tile-boundary shapes: none of these c are multiples of the
+        (8, 128) tile, so padding rows/columns must be masked out of
+        every reduction. c=1 has no pairs (t_sw = 0), c=2 is the
+        single-pair row."""
+        from repro.kernels import planner
+        g, tc = self._cands(11 * c + oma, 2, c)
+        ref_t, ref_rm, ref_sw = planner.planner_tables(
+            g, tc, 4e6, impl="xla", oma=oma, **self.KW)
+        pal_t, pal_rm, pal_sw = planner.planner_tables(
+            g, tc, 4e6, impl="interpret", oma=oma, **self.KW)
+        assert pal_t.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(pal_t, np.float32), np.asarray(ref_t), rtol=1e-2)
+        np.testing.assert_allclose(np.asarray(pal_rm), np.asarray(ref_rm),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(pal_sw), np.asarray(ref_sw),
+                                   rtol=1e-6)
+
+    def test_single_pair_semantics(self):
+        """c=2: t_sw is exactly the one off-diagonal pair entry and
+        row_min the off-diagonal minimum (fp32, pre-bf16 values)."""
+        from repro.kernels import planner
+        g, tc = self._cands(7, 1, 2)
+        _, rm, sw = planner.planner_tables(g, tc, 4e6, impl="interpret",
+                                           **self.KW)
+        ref_t, _, _ = planner.planner_tables(g, tc, 4e6, impl="xla",
+                                             **self.KW)
+        assert float(sw[0]) == pytest.approx(float(ref_t[0, 0, 1]),
+                                             rel=1e-6)
+        assert float(rm[0, 0]) == pytest.approx(float(ref_t[0, 0, 1]),
+                                                rel=1e-6)
+        assert float(rm[0, 1]) == pytest.approx(float(ref_t[0, 1, 0]),
+                                                rel=1e-6)
+
+    def test_ops_facade_completion_table_routes_to_fused(self):
+        """ops.completion_table(impl='interpret') returns the fused
+        kernel's bf16 tiles upcast to fp32, matching xla at bf16 tol."""
+        g, tc = self._cands(3, 4, 10)
+        ref = ops.completion_table(g, tc, 4e6, impl="xla", **self.KW)
+        out = ops.completion_table(g, tc, 4e6, impl="interpret", **self.KW)
+        assert out.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-2)
+
+    @pytest.mark.slow
+    @given(st.integers(2, 40), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_bf16_table_vs_fp64_reference(self, c, seed):
+        """Property: the bf16 table tracks the fp64 numpy planner
+        reference (core/pairing.py) within the documented tier —
+        bf16's ~3 decimal digits on top of the fp32-vs-fp64 gap."""
+        from repro.configs import NOMAConfig
+        from repro.core import pairing
+        from repro.kernels import planner
+        cfg = NOMAConfig()
+        rng = np.random.default_rng(seed)
+        g64 = np.sort(rng.uniform(1e-14, 1e-10, c))[::-1].copy()
+        tc64 = rng.uniform(0.05, 0.5, c)
+        ref = pairing.completion_table(g64, g64, tc64, tc64, 4e6, cfg)
+        tab, rm, _ = planner.planner_tables(
+            g64.astype(np.float32), tc64.astype(np.float32), 4e6,
+            impl="interpret", n0b=cfg.noise_density * cfg.bandwidth_hz,
+            pmax=cfg.max_power_w, bw=cfg.bandwidth_hz)
+        np.testing.assert_allclose(np.asarray(tab, np.float32), ref,
+                                   rtol=2e-2)
+        # row_min never saw bf16: fp32-vs-fp64 tolerance only
+        off = np.where(np.eye(c, dtype=bool), np.inf, ref)
+        np.testing.assert_allclose(np.asarray(rm), off.min(axis=1),
+                                   rtol=1e-4)
+
+
 class TestWKV6:
     @pytest.mark.parametrize("t,chunk", [(32, 16), (64, 64), (96, 32)])
     @pytest.mark.parametrize("c", [8, 16])

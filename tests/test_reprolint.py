@@ -173,6 +173,32 @@ class TestPrecisionContract:
         }
         assert lint(ok, rules=["precision-contract"]) == []
 
+    def test_bfloat16_in_engine_fires(self):
+        src = "import jax.numpy as jnp\nx = jnp.zeros(3, jnp.bfloat16)\n"
+        fs = lint({"src/repro/core/engine.py": src},
+                  rules=["precision-contract"])
+        assert names(fs) == ["precision-contract"]
+        assert "DESIGN.md section 13" in fs[0].message
+
+    def test_bfloat16_dtype_string_fires_in_kernels(self):
+        src = "import jax.numpy as jnp\nx = jnp.zeros(3, dtype='bfloat16')\n"
+        fs = lint({"src/repro/kernels/rates.py": src},
+                  rules=["precision-contract"])
+        assert names(fs) == ["precision-contract"]
+
+    def test_bfloat16_sanctioned_in_planner(self):
+        # planner.py is the ONE sanctioned mixed-precision kernel: its
+        # bf16 table tiles are the whole point (DESIGN.md section 13)
+        src = ("import jax.numpy as jnp\n"
+               "x = jnp.zeros((8, 128), jnp.bfloat16)\n")
+        assert lint({"src/repro/kernels/planner.py": src},
+                    rules=["precision-contract"]) == []
+
+    def test_bfloat16_outside_engine_is_fine(self):
+        src = "import jax.numpy as jnp\nx = jnp.zeros(3, jnp.bfloat16)\n"
+        assert lint({"src/repro/models/rwkv.py": src},
+                    rules=["precision-contract"]) == []
+
 
 CONFIG_OK = """\
 _POST_INIT_EXEMPT = ("seed",)

@@ -38,6 +38,15 @@ ENGINE_MODULES = (
     "repro/kernels/",
 )
 
+# the ONLY modules allowed to mention bfloat16 on the engine side: the
+# fused planner kernel stores its O(c^2) completion-table tiles bf16
+# under the mixed-precision contract (DESIGN.md section 13); everywhere
+# else bf16 silently halves the precision of threshold math the parity
+# tolerances assume is fp32
+SANCTIONED_BF16 = (
+    "repro/kernels/planner.py",
+)
+
 
 def _is_twin(relpath: str) -> bool:
     return any(relpath.endswith(m) for m in TWIN_MODULES)
@@ -80,35 +89,44 @@ class PrecisionContractRule(Rule):
     tests' tolerances encode exactly this split."""
     name = "precision-contract"
     severity = "error"
-    description = ("no float64 in engine/kernel modules; no float32 in "
+    description = ("no float64 in engine/kernel modules (and no bfloat16 "
+                   "outside the sanctioned kernel tables); no float32 in "
                    "fp64 reference twins")
 
     def check_file(self, fc: FileContext) -> Iterable[Finding]:
         if _is_engine(fc.relpath):
-            banned, side = "float64", "engine/kernel"
+            banned = {"float64": "violates the precision contract "
+                                 "(DESIGN.md section 5)"}
+            if not any(fc.relpath.endswith(m) for m in SANCTIONED_BF16):
+                banned["bfloat16"] = (
+                    "violates the mixed-precision contract — bf16 lives "
+                    "only in the sanctioned kernel table tiles "
+                    "(SANCTIONED_BF16; DESIGN.md section 13)")
         elif _is_twin(fc.relpath):
-            banned, side = "float32", "fp64 twin"
+            banned = {"float32": "violates the precision contract "
+                                 "(DESIGN.md section 5)"}
         else:
             return
         for node in ast.walk(fc.tree):
-            hit = False
-            if isinstance(node, ast.Attribute) and node.attr == banned:
-                hit = True
+            hit = None
+            if isinstance(node, ast.Attribute) and node.attr in banned:
+                hit = node.attr
             elif isinstance(node, ast.keyword) and node.arg == "dtype" \
                     and isinstance(node.value, ast.Constant) \
-                    and node.value.value == banned:
-                hit = True
+                    and node.value.value in banned:
+                hit = node.value.value
             elif isinstance(node, ast.Call):
                 fname = dotted_name(node.func, {}) or ""
                 if fname.endswith(".astype") and node.args and \
                         isinstance(node.args[0], ast.Constant) and \
-                        node.args[0].value == banned:
-                    hit = True
+                        node.args[0].value in banned:
+                    hit = node.args[0].value
             if hit:
+                side = ("engine/kernel" if _is_engine(fc.relpath)
+                        else "fp64 twin")
                 yield self.finding(
                     fc.relpath, node.lineno,
-                    f"`{banned}` in {side} module — violates the "
-                    f"precision contract (DESIGN.md section 5)")
+                    f"`{hit}` in {side} module — {banned[hit]}")
 
 
 @register
